@@ -1,0 +1,86 @@
+//! Calibration hot-loop bench: wall time per block_par_step / block_lwc
+//! step / block_fp_fwd artifact call on the tiny model, plus marshalling
+//! overhead split (upload/download bytes from EngineStats). Drives the
+//! §Perf optimization loop for L2/L3.
+//!
+//!   cargo bench --bench calib_step
+
+use std::collections::BTreeMap;
+
+use tesseraq::coordinator::pipeline::BlockRunner;
+use tesseraq::model::{ModelConfig, Params};
+use tesseraq::quant::{self, minmax_scale, nu_init, w_floor, ClipFactors};
+use tesseraq::runtime::{Arg, Engine};
+use tesseraq::tensor::{Pcg32, Tensor};
+use tesseraq::util::bench::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let eng = Engine::from_default_dir()?;
+    let size = "tiny";
+    let cfg = ModelConfig::preset(size)?;
+    let mut rng = Pcg32::seeded(0);
+    let params = Params::init(&cfg, &mut rng);
+    let bw = params.block(0);
+    let mut b = Bench::new("calib_step");
+
+    // teacher forward
+    let runner = BlockRunner::new(&eng, size)?;
+    let x = Tensor::randn(&[runner.batch, cfg.max_seq, cfg.d_model], 1.0, &mut rng);
+    b.iter("block_fp_fwd (b4)", || {
+        std::hint::black_box(runner.forward_batch(&bw, &x, quant::A16_SENTINEL).unwrap());
+    });
+
+    // PAR step
+    let art = eng.artifact(&format!("block_par_step.{size}.g128"))?;
+    let qmax = 3.0f32;
+    let mut state: BTreeMap<&str, (Tensor, Tensor, Tensor, Tensor, Tensor)> = BTreeMap::new();
+    for name in tesseraq::model::LINEAR_NAMES {
+        let w = &bw.linears[name];
+        let g = 128.min(w.shape[1]);
+        let qp = minmax_scale(w, g, &ClipFactors::Uniform(1.0),
+                              &ClipFactors::Uniform(1.0), qmax);
+        let wf = w_floor(w, &qp);
+        let nu = nu_init(w, &qp);
+        let v = Tensor::zeros(&qp.s.shape);
+        state.insert(name, (wf, qp.s, qp.z, nu, v));
+    }
+    let y = runner.forward_batch(&bw, &x, quant::A16_SENTINEL)?;
+    let rec = b.iter("block_par_step (b4, g128)", || {
+        let mut args: Vec<Arg> =
+            vec![Arg::F32(&x), Arg::F32(&y), Arg::F32(&bw.norm1), Arg::F32(&bw.norm2)];
+        for name in tesseraq::model::LINEAR_NAMES {
+            let (wf, s, z, _, _) = &state[name];
+            args.push(Arg::F32(wf));
+            args.push(Arg::F32(s));
+            args.push(Arg::F32(z));
+        }
+        // order: nu, v, m_nu, u_nu, m_v, u_v — m/u zeros share the nu/v
+        // shaped tensors for the bench (values don't matter for timing)
+        for field in ["nu", "v", "m_nu", "u_nu", "m_v", "u_v"] {
+            for name in tesseraq::model::LINEAR_NAMES {
+                let (_, _, _, nu, v) = &state[name];
+                let is_full = matches!(field, "nu" | "m_nu" | "u_nu");
+                args.push(Arg::F32(if is_full { nu } else { v }));
+            }
+        }
+        args.push(Arg::Scalar(1e-2));
+        args.push(Arg::Scalar(1.0));
+        args.push(Arg::Scalar(qmax));
+        args.push(Arg::Scalar(65535.0));
+        std::hint::black_box(eng.run(&art, &args).unwrap());
+    });
+
+    let stats = eng.stats.borrow().clone();
+    println!(
+        "\nper-step marshalling: ~{:.1} MB up / {:.1} MB down over {} exec calls",
+        stats.upload_bytes as f64 / 1e6 / stats.exec_calls.max(1) as f64,
+        stats.download_bytes as f64 / 1e6 / stats.exec_calls.max(1) as f64,
+        stats.exec_calls
+    );
+    println!(
+        "estimated full W2 tiny calibration (6 blocks x 8 iters x 24 steps): {:.0}s",
+        rec.mean_s() * 6.0 * 8.0 * 24.0
+    );
+    b.report();
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! L1/L3 kernel micro-bench: packed dequant-matmul (Rust serving kernel
+//! and the Pallas-lowered artifact) vs dense f32 matmul, across bit
+//! widths and batch sizes. Supports the §Perf log and Table 8 analysis.
+//!
+//!   cargo bench --bench kernel_qmatmul
+
+use tesseraq::model::hostfwd::LinearOp;
+use tesseraq::quant::pack::PackedLinear;
+use tesseraq::quant::{minmax_scale, rtn_codes, ClipFactors};
+use tesseraq::runtime::{Arg, Engine};
+use tesseraq::tensor::{linalg, Pcg32, Tensor};
+use tesseraq::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("qmatmul");
+    let mut rng = Pcg32::seeded(0);
+    let (o, k, g) = (768, 256, 64); // tiny gate_proj shape
+    let w = Tensor::randn(&[o, k], 1.0, &mut rng);
+
+    for m in [1usize, 16, 128] {
+        let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+        b.iter(&format!("dense f32 m={m}"), || {
+            std::hint::black_box(linalg::matmul_bt(&x, &w));
+        });
+        for bits in [2u32, 3, 4] {
+            let qmax = (2u32.pow(bits) - 1) as f32;
+            let qp = minmax_scale(&w, g, &ClipFactors::Uniform(1.0),
+                                  &ClipFactors::Uniform(1.0), qmax);
+            let codes = rtn_codes(&w, &qp, qmax);
+            let pl = PackedLinear::from_codes(&codes, o, k, bits, qp);
+            b.iter(&format!("packed w{bits} m={m}"), || {
+                std::hint::black_box(pl.forward(&x));
+            });
+        }
+    }
+
+    // Pallas-lowered artifact path (interpret-mode kernel compiled by XLA)
+    if let Ok(eng) = Engine::from_default_dir() {
+        for bits in [2u32, 4] {
+            if let Ok(art) = eng.artifact(&format!("qmatmul_w{bits}.tiny")) {
+                let spec = art.spec.clone();
+                let xs = &spec.inputs[0].shape;
+                let ps = &spec.inputs[1].shape;
+                let ss = &spec.inputs[2].shape;
+                let x = Tensor::randn(xs, 1.0, &mut rng);
+                let packed: Vec<i32> =
+                    (0..ps.iter().product::<usize>()).map(|_| rng.next_u32() as i32).collect();
+                let s = Tensor::full(ss, 0.05);
+                let z = Tensor::full(ss, 1.0);
+                b.iter(&format!("pallas artifact w{bits} m={}", xs[0]), || {
+                    let args = vec![
+                        Arg::F32(&x),
+                        Arg::I32(&packed, ps),
+                        Arg::F32(&s),
+                        Arg::F32(&z),
+                    ];
+                    std::hint::black_box(eng.run(&art, &args).unwrap());
+                });
+            }
+        }
+    }
+    b.report();
+}

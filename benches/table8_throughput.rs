@@ -1,0 +1,49 @@
+//! Table 8 bench: end-to-end decode throughput (tokens/s) and weight
+//! memory for FP16-dense vs packed W4/W2 serving, batch 1 and 16.
+//!
+//!   cargo bench --bench table8_throughput
+//!
+//! The paper's shape to reproduce: INT4 >= FP16 at batch 1 (memory-bound
+//! decode), INT2 kernel less optimized; memory ratio exact (16/N bits).
+
+use tesseraq::data::{Corpus, CorpusKind};
+use tesseraq::experiments::methods::{quantize, Method, MethodOpts};
+use tesseraq::experiments::Ctx;
+use tesseraq::quant::{GroupScheme, QuantConfig};
+use tesseraq::report::fmt_bytes;
+use tesseraq::serve::ServeModel;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new(true)?;
+    let size = "tiny";
+    let base = ctx.base_model(size, CorpusKind::WikiLike)?;
+    let corpus = Corpus::new(CorpusKind::WikiLike, base.cfg.vocab_size);
+    let gen = 32usize;
+
+    println!("{:<12} {:>10} {:>12} {:>12}", "bitwidth", "WM", "TP_1", "TP_16");
+    let mut run = |label: &str, model: &ServeModel| -> anyhow::Result<()> {
+        let p1 = vec![corpus.sample(16, 0)];
+        let (_, s1) = model.generate(&p1, gen)?;
+        let p16: Vec<Vec<i32>> = (0..16).map(|i| corpus.sample(16, i as u64)).collect();
+        let (_, s16) = model.generate(&p16, gen)?;
+        println!(
+            "{:<12} {:>10} {:>12.1} {:>12.1}",
+            label,
+            fmt_bytes(model.weight_bytes()),
+            s1.tokens_per_s,
+            s16.tokens_per_s
+        );
+        Ok(())
+    };
+
+    let dense = ServeModel::dense(&base);
+    run("FP16", &dense)?;
+    for bits in [4u32, 2] {
+        let qcfg = QuantConfig::weight_only(bits, GroupScheme::Group(128));
+        let opts = MethodOpts::new(qcfg, ctx.n_calib(), true);
+        let q = quantize(&ctx.eng, &base, Method::TesseraQ, &qcfg, &corpus, &opts)?;
+        let packed = ServeModel::packed(&q.params, q.report.as_ref().unwrap(), bits);
+        run(&format!("W{bits}A16g128"), &packed)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! End-to-end validation driver (DESIGN.md §6): pretrain the tiny model
+//! (several hundred AOT train steps, loss curve logged), quantize with
+//! RTN / AWQ / TesseraQ at W2A16g64, evaluate perplexity + zero-shot
+//! accuracy for each, then serve the packed INT2 model and report
+//! weight-memory compression and tokens/s. Results are appended to
+//! results/e2e.md; EXPERIMENTS.md records a captured run.
+//!
+//!   cargo run --release --example e2e_train_quant_eval [-- --fast]
+
+use tesseraq::data::CorpusKind;
+use tesseraq::eval::Evaluator;
+use tesseraq::experiments::methods::{quantize, Method, MethodOpts};
+use tesseraq::experiments::Ctx;
+use tesseraq::quant::{GroupScheme, QuantConfig};
+use tesseraq::report::{append_log, fmt_bytes};
+use tesseraq::serve::ServeModel;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let ctx = Ctx::new(fast)?;
+    let size = "tiny";
+    println!("== E2E train->quantize->eval->serve ({size}, fast={fast}) ==");
+
+    // 1. pretrain (cached; loss curve printed by base_model on first run)
+    let t0 = std::time::Instant::now();
+    let base = ctx.base_model(size, CorpusKind::WikiLike)?;
+    println!("base model ready in {:.1}s", t0.elapsed().as_secs_f64());
+
+    let wiki = ctx.corpus(CorpusKind::WikiLike, size)?;
+    let ev = Evaluator::new(&ctx.eng, size)?;
+    let ppl_fp = ev.perplexity(&base, None, 65535.0, &wiki, ctx.n_eval(), 0xE2E)?;
+    let acc_fp = ev.zeroshot_suite(&base, None, 65535.0, &wiki, ctx.n_items(), 24)?;
+    println!("FP16: PPL {ppl_fp:.3}, zero-shot avg {:.2}%",
+             acc_fp.last().unwrap().1 * 100.0);
+
+    let qcfg = QuantConfig::weight_only(2, GroupScheme::Group(64));
+    let mut log = format!(
+        "## e2e_train_quant_eval {size} {} (fast={fast})\n\n| method | PPL | acc avg | calib s |\n|---|---|---|---|\n| FP16 | {ppl_fp:.3} | {:.2} | - |\n",
+        qcfg.label(),
+        acc_fp.last().unwrap().1 * 100.0
+    );
+
+    let mut tq_report = None;
+    let mut tq_params = None;
+    for m in [Method::Rtn, Method::Awq, Method::TesseraQ] {
+        let opts = MethodOpts::new(qcfg, ctx.n_calib(), ctx.fast);
+        let t1 = std::time::Instant::now();
+        let q = quantize(&ctx.eng, &base, m, &qcfg, &wiki, &opts)?;
+        let dt = t1.elapsed().as_secs_f64();
+        let ppl = ev.perplexity(&q.params, q.head_t.as_ref(), qcfg.qmax_act(), &wiki,
+                                ctx.n_eval(), 0xE2E)?;
+        let accs = ev.zeroshot_suite(&q.params, q.head_t.as_ref(), qcfg.qmax_act(),
+                                     &wiki, ctx.n_items(), 24)?;
+        let avg = accs.last().unwrap().1 * 100.0;
+        println!("{:<10} PPL {ppl:8.3}  acc {avg:5.2}%  ({dt:.1}s)", m.label());
+        log.push_str(&format!("| {} | {ppl:.3} | {avg:.2} | {dt:.1} |\n", m.label()));
+        if m == Method::TesseraQ {
+            tq_report = q.report;
+            tq_params = Some(q.params);
+        }
+    }
+
+    // 3. packed serving
+    let report = tq_report.unwrap();
+    let params = tq_params.unwrap();
+    let dense = ServeModel::dense(&base);
+    let packed = ServeModel::packed(&params, &report, qcfg.w_bits);
+    for (label, model) in [("FP16 dense", &dense), ("W2 packed", &packed)] {
+        let prompts: Vec<Vec<i32>> = (0..4).map(|i| wiki.sample(16, i as u64)).collect();
+        let (_, stats) = model.generate(&prompts, if fast { 16 } else { 48 })?;
+        println!("{label:<12} WM {:<9} {:.1} tok/s",
+                 fmt_bytes(stats.weight_bytes), stats.tokens_per_s);
+        log.push_str(&format!("\nserve {label}: WM {}, {:.1} tok/s",
+                              fmt_bytes(stats.weight_bytes), stats.tokens_per_s));
+    }
+    append_log("e2e.md", &log)?;
+    println!("\nrecorded to results/e2e.md");
+    Ok(())
+}

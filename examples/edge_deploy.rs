@@ -1,0 +1,48 @@
+//! Edge-deployment scenario (paper Table 4 / §4.2 "Smaller-Size LLM for
+//! Edge Inference"): quantize the nano model to W2/W3/W4 with TesseraQ,
+//! pack the weights, and report the memory/accuracy/latency trade-off a
+//! deployment engineer would look at.
+//!
+//!   cargo run --release --example edge_deploy
+
+use tesseraq::data::CorpusKind;
+use tesseraq::eval::Evaluator;
+use tesseraq::experiments::methods::{quantize, Method, MethodOpts};
+use tesseraq::experiments::Ctx;
+use tesseraq::quant::{GroupScheme, QuantConfig};
+use tesseraq::report::fmt_bytes;
+use tesseraq::serve::ServeModel;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new(true)?;
+    let size = "nano";
+    let base = ctx.base_model(size, CorpusKind::WikiLike)?;
+    let wiki = ctx.corpus(CorpusKind::WikiLike, size)?;
+    let ev = Evaluator::new(&ctx.eng, size)?;
+
+    let dense = ServeModel::dense(&base);
+    let ppl_fp = ev.perplexity(&base, None, 65535.0, &wiki, 16, 3)?;
+    println!("{:<6} {:<10} {:>8} {:>10} {:>10}", "bits", "ppl", "WM", "tok/s b1", "tok/s b4");
+    let bench = |m: &ServeModel| -> anyhow::Result<(f64, f64)> {
+        let p1 = vec![wiki.sample(12, 0)];
+        let (_, s1) = m.generate(&p1, 32)?;
+        let p4: Vec<Vec<i32>> = (0..4).map(|i| wiki.sample(12, i as u64)).collect();
+        let (_, s4) = m.generate(&p4, 32)?;
+        Ok((s1.tokens_per_s, s4.tokens_per_s))
+    };
+    let (t1, t4) = bench(&dense)?;
+    println!("{:<6} {:<10.3} {:>8} {:>10.1} {:>10.1}", "fp16", ppl_fp,
+             fmt_bytes(dense.weight_bytes()), t1, t4);
+
+    for bits in [4u32, 3, 2] {
+        let qcfg = QuantConfig::weight_only(bits, GroupScheme::Group(32));
+        let opts = MethodOpts::new(qcfg, 16, true);
+        let q = quantize(&ctx.eng, &base, Method::TesseraQ, &qcfg, &wiki, &opts)?;
+        let ppl = ev.perplexity(&q.params, None, 65535.0, &wiki, 16, 3)?;
+        let packed = ServeModel::packed(&q.params, q.report.as_ref().unwrap(), bits);
+        let (t1, t4) = bench(&packed)?;
+        println!("{:<6} {:<10.3} {:>8} {:>10.1} {:>10.1}", format!("w{bits}"), ppl,
+                 fmt_bytes(packed.weight_bytes()), t1, t4);
+    }
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Quickstart: the minimal TesseraQ flow on the nano model.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! 1. pretrain a nano LM via the AOT train-step artifact
+//! 2. quantize it to W2 with plain RTN and with TesseraQ
+//! 3. compare wiki-like perplexity
+
+use tesseraq::coordinator::par::{calibrate_tesseraq, TesseraqConfig};
+use tesseraq::coordinator::pretrain::{pretrain, PretrainConfig};
+use tesseraq::data::{Corpus, CorpusKind};
+use tesseraq::eval::Evaluator;
+use tesseraq::experiments::methods::rtn_model;
+use tesseraq::model::{ModelConfig, Params};
+use tesseraq::quant::{GroupScheme, QuantConfig};
+use tesseraq::tensor::Pcg32;
+use tesseraq::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let eng = Engine::from_default_dir()?;
+    println!("PJRT platform: {}", eng.platform());
+
+    // 1. pretrain
+    let cfg = ModelConfig::preset("nano")?;
+    let corpus = Corpus::new(CorpusKind::WikiLike, cfg.vocab_size);
+    let mut rng = Pcg32::seeded(42);
+    let mut params = Params::init(&cfg, &mut rng);
+    let pcfg = PretrainConfig { steps: 80, ..Default::default() };
+    println!("pretraining nano ({:.2}M params)...", cfg.param_count() as f64 / 1e6);
+    pretrain(&eng, &mut params, &corpus, &pcfg, |s, l| println!("  step {s:>3} loss {l:.4}"))?;
+
+    // 2. evaluate FP, RTN, TesseraQ at W2A16g32
+    let ev = Evaluator::new(&eng, "nano")?;
+    let ppl_fp = ev.perplexity(&params, None, 65535.0, &corpus, 16, 7)?;
+
+    let qcfg = QuantConfig::weight_only(2, GroupScheme::Group(32));
+    let mut p_rtn = params.clone();
+    rtn_model(&mut p_rtn, &qcfg);
+    let ppl_rtn = ev.perplexity(&p_rtn, None, 65535.0, &corpus, 16, 7)?;
+
+    let mut p_tq = params.clone();
+    let tokens = corpus.sequences(16, cfg.max_seq, 123);
+    let tcfg = TesseraqConfig::standard(qcfg);
+    let report = calibrate_tesseraq(&eng, &mut p_tq, None, &tokens, 16, &tcfg)?;
+    let ppl_tq = ev.perplexity(&p_tq, None, 65535.0, &corpus, 16, 7)?;
+
+    println!("\n== W2A16g32 on nano ==");
+    println!("FP16      PPL: {ppl_fp:.3}");
+    println!("RTN       PPL: {ppl_rtn:.3}");
+    println!("TesseraQ  PPL: {ppl_tq:.3}  (calibrated in {:.1}s)", report.wall_s);
+    assert!(ppl_tq < ppl_rtn, "TesseraQ should beat RTN");
+    Ok(())
+}

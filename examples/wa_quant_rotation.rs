@@ -1,0 +1,37 @@
+//! Weight-activation quantization with QuaRot-style rotation (paper
+//! Table 3): shows why W4A4 needs outlier suppression — plain RTN
+//! collapses, rotation + GPTQ/TesseraQ recovers.
+//!
+//!   cargo run --release --example wa_quant_rotation
+
+use tesseraq::data::CorpusKind;
+use tesseraq::eval::Evaluator;
+use tesseraq::experiments::methods::{quantize, Method, MethodOpts};
+use tesseraq::experiments::Ctx;
+use tesseraq::quant::{GroupScheme, QuantConfig};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new(true)?;
+    let size = "nano";
+    let base = ctx.base_model(size, CorpusKind::WikiLike)?;
+    let wiki = ctx.corpus(CorpusKind::WikiLike, size)?;
+    let ev = Evaluator::new(&ctx.eng, size)?;
+    let ppl_fp = ev.perplexity(&base, None, 65535.0, &wiki, 16, 11)?;
+    println!("FP16 PPL {ppl_fp:.3}\n");
+    println!("{:<16} {:>10}", "method", "W4A4 PPL");
+
+    let qcfg = QuantConfig::new(4, GroupScheme::PerChannel, Some(4));
+    for m in [
+        Method::Rtn,
+        Method::SmoothQuant,
+        Method::QuaRot,
+        Method::QuaRotGptq,
+        Method::QuaRotTesseraQ,
+    ] {
+        let opts = MethodOpts::new(qcfg, 16, true);
+        let q = quantize(&ctx.eng, &base, m, &qcfg, &wiki, &opts)?;
+        let ppl = ev.perplexity(&q.params, q.head_t.as_ref(), qcfg.qmax_act(), &wiki, 16, 11)?;
+        println!("{:<16} {:>10.3}", m.label(), ppl);
+    }
+    Ok(())
+}

@@ -1,0 +1,355 @@
+"""AOT artifact emitter: lower every L2 graph to HLO *text* + manifest.
+
+Run once at build time (`make artifacts`); the Rust runtime
+(rust/src/runtime/) loads `artifacts/<name>.hlo.txt` via
+HloModuleProto::from_text_file and compiles it on the PJRT CPU client.
+
+HLO text — NOT serialized protos — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+`artifacts/manifest.json` is the machine-readable contract: for every
+artifact it records the positional input/output names, shapes and dtypes,
+plus model/quant metadata. rust/src/runtime/manifest.rs parses it.
+"""
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import (DEFAULT_CALIB_BATCH, DEFAULT_TRAIN_BATCH, LINEAR_NAMES,
+                      MODELS, SCHEMES, ModelConfig, group_size_for)
+from . import model as M
+from .kernels.qmatmul import qmatmul
+from .quantize import SAT_NU
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+EVAL_BATCH = 8  # sequences per model_fwd_nll call
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants is MANDATORY: the default printer elides big
+    # array constants as literally "{...}", which the XLA 0.5.1 text
+    # parser silently turns into zeros — rope tables and causal masks
+    # (embedded as constants by jnp.arange/jnp.tril) get corrupted and
+    # the artifact diverges from jax by ~1e-2. Found the hard way; see
+    # DESIGN.md §AOT-gotchas.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def group_shapes(cfg: ModelConfig, scheme: str) -> Dict[str, Tuple[int, int]]:
+    """[out, n_groups] per linear for a group scheme."""
+    out = {}
+    for name, (o, i) in cfg.linear_shapes().items():
+        g = group_size_for(scheme, i)
+        out[name] = (o, i // g)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Artifact builders: each returns (fn, input_specs, input_names, output_names)
+
+
+def build_model_train_step(cfg: ModelConfig):
+    shapes = M.param_shapes(cfg)
+    names = (["tokens"]
+             + [f"param.{n}" for n in M.PARAM_NAMES]
+             + [f"m.{n}" for n in M.PARAM_NAMES]
+             + [f"u.{n}" for n in M.PARAM_NAMES]
+             + ["lr", "t"])
+    specs = ([spec((DEFAULT_TRAIN_BATCH, cfg.max_seq), I32)]
+             + [spec(shapes[n]) for n in M.PARAM_NAMES] * 3
+             + [spec(()), spec(())])
+
+    def fn(*args):
+        i = 0
+        tokens = args[i]; i += 1
+        p = {n: args[i + j] for j, n in enumerate(M.PARAM_NAMES)}; i += len(M.PARAM_NAMES)
+        m = {n: args[i + j] for j, n in enumerate(M.PARAM_NAMES)}; i += len(M.PARAM_NAMES)
+        u = {n: args[i + j] for j, n in enumerate(M.PARAM_NAMES)}; i += len(M.PARAM_NAMES)
+        lr, t = args[i], args[i + 1]
+        loss, np_, nm, nu_ = M.train_step(tokens, p, m, u, lr, t, cfg)
+        outs = [loss]
+        outs += [np_[n] for n in M.PARAM_NAMES]
+        outs += [nm[n] for n in M.PARAM_NAMES]
+        outs += [nu_[n] for n in M.PARAM_NAMES]
+        return tuple(outs)
+
+    out_names = (["loss"]
+                 + [f"param.{n}" for n in M.PARAM_NAMES]
+                 + [f"m.{n}" for n in M.PARAM_NAMES]
+                 + [f"u.{n}" for n in M.PARAM_NAMES])
+    return fn, specs, names, out_names
+
+
+def build_model_fwd_nll(cfg: ModelConfig):
+    shapes = M.param_shapes(cfg)
+    names = (["tokens"] + [f"param.{n}" for n in M.PARAM_NAMES]
+             + ["head_t", "qmax_act"])
+    specs = ([spec((EVAL_BATCH, cfg.max_seq), I32)]
+             + [spec(shapes[n]) for n in M.PARAM_NAMES]
+             + [spec((cfg.d_model, cfg.d_model)), spec(())])
+
+    def fn(*args):
+        tokens = args[0]
+        p = {n: args[1 + j] for j, n in enumerate(M.PARAM_NAMES)}
+        head_t = args[1 + len(M.PARAM_NAMES)]
+        qmax_act = args[2 + len(M.PARAM_NAMES)]
+        return (M.model_nll(tokens, p, cfg, qmax_act, head_t),)
+
+    return fn, specs, names, ["nll"]
+
+
+def build_block_fp_fwd(cfg: ModelConfig, batch: int):
+    lsh = cfg.linear_shapes()
+    names = (["x", "norm1", "norm2"]
+             + [f"w.{n}" for n in LINEAR_NAMES] + ["qmax_act"])
+    specs = ([spec((batch, cfg.max_seq, cfg.d_model)),
+              spec((cfg.d_model,)), spec((cfg.d_model,))]
+             + [spec(lsh[n]) for n in LINEAR_NAMES] + [spec(())])
+
+    def fn(*args):
+        x, n1, n2 = args[0], args[1], args[2]
+        w = {n: args[3 + j] for j, n in enumerate(LINEAR_NAMES)}
+        qa = args[3 + len(LINEAR_NAMES)]
+        return (M.block_fp_fwd(x, n1, n2, w, cfg, qa),)
+
+    return fn, specs, names, ["y"]
+
+
+def build_block_quant_fwd(cfg: ModelConfig, scheme: str, batch: int):
+    lsh = cfg.linear_shapes()
+    gsh = group_shapes(cfg, scheme)
+    names = ["x", "norm1", "norm2"]
+    specs = [spec((batch, cfg.max_seq, cfg.d_model)),
+             spec((cfg.d_model,)), spec((cfg.d_model,))]
+    for n in LINEAR_NAMES:
+        names += [f"wf.{n}", f"s.{n}", f"z.{n}", f"nu.{n}", f"v.{n}"]
+        specs += [spec(lsh[n]), spec(gsh[n]), spec(gsh[n]),
+                  spec(lsh[n]), spec(gsh[n])]
+    names += ["qmax_w", "qmax_act"]
+    specs += [spec(()), spec(())]
+
+    def fn(*args):
+        x, n1, n2 = args[0], args[1], args[2]
+        i = 3
+        qstate = {}
+        for n in LINEAR_NAMES:
+            qstate[n] = tuple(args[i:i + 5]); i += 5
+        qmax_w, qmax_act = args[i], args[i + 1]
+        return (M.block_quant_fwd(x, n1, n2, qstate, cfg, qmax_w, qmax_act),)
+
+    return fn, specs, names, ["y"]
+
+
+def build_block_par_step(cfg: ModelConfig, scheme: str, batch: int):
+    lsh = cfg.linear_shapes()
+    gsh = group_shapes(cfg, scheme)
+    nL = len(LINEAR_NAMES)
+    names = ["x", "y", "norm1", "norm2"]
+    specs = [spec((batch, cfg.max_seq, cfg.d_model))] * 2 + \
+            [spec((cfg.d_model,))] * 2
+    for n in LINEAR_NAMES:
+        names += [f"wf.{n}", f"s.{n}", f"z.{n}"]
+        specs += [spec(lsh[n]), spec(gsh[n]), spec(gsh[n])]
+    for group, shfn in [("nu", lambda n: lsh[n]), ("v", lambda n: gsh[n]),
+                        ("m_nu", lambda n: lsh[n]), ("u_nu", lambda n: lsh[n]),
+                        ("m_v", lambda n: gsh[n]), ("u_v", lambda n: gsh[n])]:
+        for n in LINEAR_NAMES:
+            names.append(f"{group}.{n}")
+            specs.append(spec(shfn(n)))
+    names += ["lr", "t", "qmax_w", "qmax_act"]
+    specs += [spec(())] * 4
+
+    def fn(*args):
+        x, y, n1, n2 = args[:4]
+        i = 4
+        qstate = {}
+        for n in LINEAR_NAMES:
+            qstate[n] = tuple(args[i:i + 3]); i += 3
+        nus = list(args[i:i + nL]); i += nL
+        vs = list(args[i:i + nL]); i += nL
+        m_nu = list(args[i:i + nL]); i += nL
+        u_nu = list(args[i:i + nL]); i += nL
+        m_v = list(args[i:i + nL]); i += nL
+        u_v = list(args[i:i + nL]); i += nL
+        lr, t, qmax_w, qmax_act = args[i:i + 4]
+        loss, nnu, nv, nmn, nun, nmv, nuv = M.par_step(
+            x, y, n1, n2, qstate, nus, vs, m_nu, u_nu, m_v, u_v,
+            lr, t, qmax_w, qmax_act, cfg)
+        return tuple([loss] + nnu + nv + nmn + nun + nmv + nuv)
+
+    out_names = ["loss"]
+    for group in ["nu", "v", "m_nu", "u_nu", "m_v", "u_v"]:
+        out_names += [f"{group}.{n}" for n in LINEAR_NAMES]
+    return fn, specs, names, out_names
+
+
+def build_block_lwc_step(cfg: ModelConfig, scheme: str, batch: int):
+    lsh = cfg.linear_shapes()
+    gsh = group_shapes(cfg, scheme)
+    nL = len(LINEAR_NAMES)
+    names = ["x", "y", "norm1", "norm2"]
+    specs = [spec((batch, cfg.max_seq, cfg.d_model))] * 2 + \
+            [spec((cfg.d_model,))] * 2
+    names += [f"w.{n}" for n in LINEAR_NAMES]
+    specs += [spec(lsh[n]) for n in LINEAR_NAMES]
+    for group in ["gamma", "beta", "m_g", "u_g", "m_b", "u_b"]:
+        for n in LINEAR_NAMES:
+            names.append(f"{group}.{n}")
+            specs.append(spec(gsh[n]))
+    names += ["lr", "t", "qmax_w", "qmax_act"]
+    specs += [spec(())] * 4
+
+    def fn(*args):
+        x, y, n1, n2 = args[:4]
+        i = 4
+        w = {n: args[i + j] for j, n in enumerate(LINEAR_NAMES)}; i += nL
+        gam = list(args[i:i + nL]); i += nL
+        bet = list(args[i:i + nL]); i += nL
+        m_g = list(args[i:i + nL]); i += nL
+        u_g = list(args[i:i + nL]); i += nL
+        m_b = list(args[i:i + nL]); i += nL
+        u_b = list(args[i:i + nL]); i += nL
+        lr, t, qmax_w, qmax_act = args[i:i + 4]
+        loss, ng, nb, nmg, nug, nmb, nub = M.lwc_step(
+            x, y, n1, n2, w, gam, bet, m_g, u_g, m_b, u_b,
+            lr, t, qmax_w, qmax_act, cfg)
+        return tuple([loss] + ng + nb + nmg + nug + nmb + nub)
+
+    out_names = ["loss"]
+    for group in ["gamma", "beta", "m_g", "u_g", "m_b", "u_b"]:
+        out_names += [f"{group}.{n}" for n in LINEAR_NAMES]
+    return fn, specs, names, out_names
+
+
+def build_qmatmul(cfg: ModelConfig, bits: int):
+    """Standalone packed dequant-matmul kernel artifact (decode shapes)."""
+    k = cfg.d_model
+    o = cfg.d_model
+    g = 64 if k % 64 == 0 else k
+    per_word = 32 // bits
+    nw = (k + per_word - 1) // per_word
+    m = cfg.max_seq
+    names = ["x", "packed", "s", "z"]
+    specs = [spec((m, k)), spec((o, nw), I32),
+             spec((o, k // g)), spec((o, k // g))]
+
+    def fn(x, packed, s, z):
+        return (qmatmul(x, packed, s, z, bits),)
+
+    return fn, specs, names, ["y"]
+
+
+# ---------------------------------------------------------------------------
+# Driver
+
+
+def emit(out_dir: str, name: str, builder, manifest: list, meta: dict,
+         force: bool) -> None:
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    fn, specs, in_names, out_names = builder
+    entry = {
+        "name": name,
+        "path": os.path.basename(path),
+        "inputs": [{"name": n, "shape": list(s.shape),
+                    "dtype": str(s.dtype.name)} for n, s in zip(in_names, specs)],
+        "outputs": out_names,
+        "meta": meta,
+    }
+    manifest.append(entry)
+    if os.path.exists(path) and not force:
+        print(f"  [cached] {name}")
+        return
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  [lowered] {name} ({len(text)} chars, {len(specs)} inputs)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--sizes", default="nano,tiny,tiny-gqa,small")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    sizes = [s for s in args.sizes.split(",") if s]
+
+    manifest: list = []
+    for size in sizes:
+        cfg = MODELS[size]
+        print(f"== {size}: {cfg.param_count()/1e6:.2f}M params ==")
+        mmeta = {"size": size, "model": cfg.__dict__,
+                 "train_batch": DEFAULT_TRAIN_BATCH,
+                 "eval_batch": EVAL_BATCH,
+                 "calib_batch": DEFAULT_CALIB_BATCH,
+                 "sat_nu": SAT_NU}
+        emit(out_dir, f"model_train_step.{size}",
+             build_model_train_step(cfg), manifest,
+             {**mmeta, "kind": "model_train_step"}, args.force)
+        emit(out_dir, f"model_fwd_nll.{size}",
+             build_model_fwd_nll(cfg), manifest,
+             {**mmeta, "kind": "model_fwd_nll"}, args.force)
+        emit(out_dir, f"block_fp_fwd.{size}",
+             build_block_fp_fwd(cfg, DEFAULT_CALIB_BATCH), manifest,
+             {**mmeta, "kind": "block_fp_fwd", "batch": DEFAULT_CALIB_BATCH},
+             args.force)
+        schemes = SCHEMES[size] if size != "tiny-gqa" else ["g128"]
+        for scheme in schemes:
+            smeta = {**mmeta, "scheme": scheme}
+            emit(out_dir, f"block_quant_fwd.{size}.{scheme}",
+                 build_block_quant_fwd(cfg, scheme, DEFAULT_CALIB_BATCH),
+                 manifest, {**smeta, "kind": "block_quant_fwd",
+                            "batch": DEFAULT_CALIB_BATCH}, args.force)
+            emit(out_dir, f"block_par_step.{size}.{scheme}",
+                 build_block_par_step(cfg, scheme, DEFAULT_CALIB_BATCH),
+                 manifest, {**smeta, "kind": "block_par_step",
+                            "batch": DEFAULT_CALIB_BATCH}, args.force)
+            emit(out_dir, f"block_lwc_step.{size}.{scheme}",
+                 build_block_lwc_step(cfg, scheme, DEFAULT_CALIB_BATCH),
+                 manifest, {**smeta, "kind": "block_lwc_step",
+                            "batch": DEFAULT_CALIB_BATCH}, args.force)
+        # Table 5 batch-size sweep artifacts (tiny, g128 only).
+        if size == "tiny":
+            for b in (1, 2):
+                emit(out_dir, f"block_par_step.{size}.g128.b{b}",
+                     build_block_par_step(cfg, "g128", b), manifest,
+                     {**mmeta, "scheme": "g128", "kind": "block_par_step",
+                      "batch": b}, args.force)
+        # Packed dequant-matmul kernel artifacts (L1 bench/test).
+        if size in ("nano", "tiny"):
+            for bits in (2, 3, 4):
+                emit(out_dir, f"qmatmul_w{bits}.{size}",
+                     build_qmatmul(cfg, bits), manifest,
+                     {**mmeta, "kind": "qmatmul", "bits": bits,
+                      "group": 64 if cfg.d_model % 64 == 0 else cfg.d_model},
+                     args.force)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump({"artifacts": manifest,
+                   "param_names": M.PARAM_NAMES,
+                   "linear_names": LINEAR_NAMES}, f, indent=1)
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Model and quantization configurations shared by the AOT compile path.
+
+The Rust coordinator mirrors these configs (rust/src/model/config.rs); the
+artifact manifest emitted by aot.py is the contract between the two sides,
+but the *named presets* here must stay in sync with the Rust presets.
+
+Sizes are chosen so that every paper group scheme divides every linear's
+input dimension (g64 and g128 must divide d_model and d_ff).
+"""
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """LLaMA-architecture decoder configuration.
+
+    Linears per block follow the paper's Table 7 naming:
+    q_proj/k_proj/v_proj/o_proj [d_model or d_kv, d_model],
+    gate_proj/up_proj [d_ff, d_model], down_proj [d_model, d_ff].
+    """
+
+    name: str
+    vocab_size: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    n_layers: int
+    max_seq: int
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_kv(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def linear_shapes(self) -> Dict[str, tuple]:
+        """(out, in) shape of every quantizable linear in one block."""
+        d, dkv, f = self.d_model, self.d_kv, self.d_ff
+        return {
+            "q_proj": (d, d),
+            "k_proj": (dkv, d),
+            "v_proj": (dkv, d),
+            "o_proj": (d, d),
+            "gate_proj": (f, d),
+            "up_proj": (f, d),
+            "down_proj": (d, f),
+        }
+
+    def param_count(self) -> int:
+        n = self.vocab_size * self.d_model + self.d_model  # emb + final norm
+        for (o, i) in self.linear_shapes().values():
+            n += o * i
+        n += 2 * self.d_model  # two norms
+        return self.vocab_size * self.d_model + self.d_model + self.n_layers * (
+            sum(o * i for (o, i) in self.linear_shapes().values()) + 2 * self.d_model
+        )
+
+
+LINEAR_NAMES: List[str] = [
+    "q_proj", "k_proj", "v_proj", "o_proj", "gate_proj", "up_proj", "down_proj",
+]
+
+MODELS: Dict[str, ModelConfig] = {
+    # Unit-test scale: everything runs in milliseconds.
+    "nano": ModelConfig("nano", vocab_size=128, d_model=64, n_heads=2,
+                        n_kv_heads=2, d_ff=192, n_layers=2, max_seq=64),
+    # Main experiment scale (analogue of LLaMA-2-7B in the tables).
+    "tiny": ModelConfig("tiny", vocab_size=256, d_model=256, n_heads=4,
+                        n_kv_heads=4, d_ff=768, n_layers=6, max_seq=128),
+    # GQA variant (analogue of Mistral-7B, Table 11).
+    "tiny-gqa": ModelConfig("tiny-gqa", vocab_size=256, d_model=256, n_heads=4,
+                            n_kv_heads=2, d_ff=896, n_layers=6, max_seq=128),
+    # Larger scale for the cross-size sweeps (analogue of 13B/70B rows).
+    "small": ModelConfig("small", vocab_size=512, d_model=384, n_heads=6,
+                         n_kv_heads=6, d_ff=1152, n_layers=8, max_seq=128),
+}
+
+
+def group_size_for(scheme: str, in_features: int) -> int:
+    """Resolve a group scheme name to a concrete group size.
+
+    "pc" is per-channel quantization: one group spanning the whole input
+    dimension of each output channel. "gN" is per-group with size N.
+    """
+    if scheme == "pc":
+        return in_features
+    if scheme.startswith("g"):
+        g = int(scheme[1:])
+        if in_features % g != 0:
+            raise ValueError(f"group size {g} does not divide {in_features}")
+        return g
+    raise ValueError(f"unknown group scheme {scheme!r}")
+
+
+# Group schemes built per model size by aot.py.
+SCHEMES: Dict[str, List[str]] = {
+    "nano": ["pc", "g32"],
+    "tiny": ["pc", "g64", "g128"],
+    "tiny-gqa": ["pc", "g64", "g128"],
+    "small": ["pc", "g64", "g128"],
+}
+
+# Calibration batch size baked into the block-step artifacts (Table 5's
+# batch-size sweep rebuilds with --batch).
+DEFAULT_CALIB_BATCH = 4
+# Pretraining batch size baked into model_train_step.
+DEFAULT_TRAIN_BATCH = 8

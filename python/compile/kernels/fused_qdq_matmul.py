@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: fused soft quant-dequant + matmul.
+
+This is the block-forward hot-spot of TesseraQ: every linear in a decoder
+block evaluates  y = x @ soft_qdq(W).T  thousands of times during PAR.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper's CUDA analogue
+would stage W tiles in shared memory per threadblock; here each grid step
+owns a VMEM-resident (bo x K) weight tile plus its rounding state, rebuilds
+the dequantized tile once, and feeds an (bm x K)·(K x bo) MXU contraction.
+The grid is (M/bm, O/bo); K (<= d_ff <= 1152) stays unsplit so the group
+structure [out, n_groups, g] never straddles a tile boundary.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so this lowers to plain HLO (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tile(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap (keeps BlockSpecs exact)."""
+    t = min(n, cap)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+def _kernel(x_ref, wf_ref, s_ref, z_ref, nu_ref, v_ref, qmax_ref, o_ref):
+    x = x_ref[...]                    # [bm, K]
+    wf = wf_ref[...]                  # [bo, K]
+    s = s_ref[...]                    # [bo, G]
+    z = z_ref[...]                    # [bo, G]
+    nu = nu_ref[...]                  # [bo, K]
+    v = v_ref[...]                    # [bo, G]
+    qmax = qmax_ref[0, 0]
+    bo, k = wf.shape
+    ng = s.shape[1]
+    g = k // ng
+    alpha = jax.nn.sigmoid(nu).reshape(bo, ng, g)
+    q = jnp.clip(wf.reshape(bo, ng, g) + alpha + z[..., None], 0.0, qmax)
+    deq = 2.0 * jax.nn.sigmoid(v)[..., None] * s[..., None] * (q - z[..., None])
+    what = deq.reshape(bo, k)
+    o_ref[...] = jnp.dot(x, what.T, preferred_element_type=jnp.float32)
+
+
+def fused_qdq_matmul(x, w_floor, s, z, nu, v, qmax, bm=128, bo=128):
+    """y = x @ soft_qdq(w_floor, s, z, nu, v, qmax).T via Pallas.
+
+    x: [M, K]; w_floor/nu: [O, K]; s/z/v: [O, G]; qmax: scalar-like.
+    """
+    m, k = x.shape
+    o = w_floor.shape[0]
+    ng = s.shape[1]
+    bm = _tile(m, bm)
+    bo = _tile(o, bo)
+    qmax_arr = jnp.asarray(qmax, jnp.float32).reshape(1, 1)
+    grid = (m // bm, o // bo)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bo, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((bo, ng), lambda i, j: (j, 0)),
+            pl.BlockSpec((bo, ng), lambda i, j: (j, 0)),
+            pl.BlockSpec((bo, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((bo, ng), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bo), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, o), jnp.float32),
+        interpret=True,
+    )(x, w_floor, s, z, nu, v, qmax_arr)

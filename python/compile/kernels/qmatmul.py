@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: packed INT{2,3,4} dequant-matmul (serving hot-spot).
+
+The paper's Table 8 measures Triton (INT2) and Exllama (INT4) GPU kernels;
+this is the TPU-semantics restatement: weights live packed in HBM (int32
+words, `32 // bits` codes per word, low bits first — layout shared with
+rust/src/quant/pack.rs), each grid step unpacks one (bo x K) tile into
+VMEM, dequantizes against per-group (s, z), and runs the MXU contraction.
+Unpacking is a shift/mask broadcast (VPU-friendly), not a per-element loop.
+
+bits is a *compile-time* constant (the packed layout depends on it), so
+aot.py emits one artifact per bit-width: qmatmul_w{2,3,4}.<size>.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fused_qdq_matmul import _tile
+
+
+def _make_kernel(bits: int, k: int):
+    per_word = 32 // bits
+    mask = (1 << bits) - 1
+
+    def kernel(x_ref, p_ref, s_ref, z_ref, o_ref):
+        x = x_ref[...]                  # [bm, K]
+        packed = p_ref[...]             # [bo, n_words]
+        s = s_ref[...]                  # [bo, G]
+        z = z_ref[...]                  # [bo, G]
+        bo = packed.shape[0]
+        # iota instead of a captured arange: pallas kernels may not close
+        # over device constants.
+        shifts = jax.lax.broadcasted_iota(
+            jnp.int32, (1, 1, per_word), 2) * bits
+        codes = (packed[..., None] >> shifts) & mask
+        codes = codes.reshape(bo, per_word * packed.shape[1])[:, :k]
+        ng = s.shape[1]
+        g = k // ng
+        cg = codes.astype(jnp.float32).reshape(bo, ng, g)
+        w = (s[..., None] * (cg - z[..., None])).reshape(bo, k)
+        o_ref[...] = jnp.dot(x, w.T, preferred_element_type=jnp.float32)
+
+    return kernel
+
+
+def qmatmul(x, packed, s, z, bits, bm=128, bo=128):
+    """y = x @ dequant(packed, s, z).T with INT`bits` packed weights.
+
+    x: [M, K] f32; packed: [O, ceil(K/per_word)] int32; s/z: [O, G].
+    """
+    m, k = x.shape
+    o = packed.shape[0]
+    ng = s.shape[1]
+    nw = packed.shape[1]
+    bm = _tile(m, bm)
+    bo = _tile(o, bo)
+    grid = (m // bm, o // bo)
+    return pl.pallas_call(
+        _make_kernel(bits, k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bo, nw), lambda i, j: (j, 0)),
+            pl.BlockSpec((bo, ng), lambda i, j: (j, 0)),
+            pl.BlockSpec((bo, ng), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bo), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, o), jnp.float32),
+        interpret=True,
+    )(x, packed, s, z)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the L1 correctness contract).
+
+pytest (python/tests/test_kernels.py) asserts kernel == oracle across a
+hypothesis sweep of shapes/dtypes; the Rust host quantizer is additionally
+tied to these semantics through the artifact integration tests.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..quantize import soft_qdq
+
+
+def rmsnorm_ref(x, w, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def qdq_matmul_ref(x, w_floor, s, z, nu, v, qmax):
+    """y = x @ soft_qdq(W).T — the block-forward hot-spot."""
+    what = soft_qdq(w_floor, s, z, nu, v, qmax)
+    return x @ what.T
+
+
+def unpack_codes_ref(packed, bits, k):
+    """Unpack int32 words -> integer codes [out, k].
+
+    Packing layout (mirrored by rust/src/quant/pack.rs): codes along the
+    input dim, `per_word = 32 // bits` codes per word, code j occupies bits
+    [bits*j, bits*(j+1)) of its word, low bits first. For bits=3 this
+    packs 10 codes per word and wastes the top 2 bits.
+    """
+    per_word = 32 // bits
+    mask = (1 << bits) - 1
+    shifts = jnp.arange(per_word, dtype=jnp.int32) * bits
+    # [out, n_words, per_word]
+    codes = (packed[..., None] >> shifts[None, None, :]) & mask
+    o = packed.shape[0]
+    return codes.reshape(o, per_word * packed.shape[1])[:, :k]
+
+
+def qmatmul_ref(x, packed, s, z, bits):
+    """y = x @ (s * (codes - z)).T with packed INT{2,3,4} weights."""
+    k = x.shape[-1]
+    codes = unpack_codes_ref(packed, bits, k).astype(jnp.float32)
+    o = codes.shape[0]
+    ng = s.shape[1]
+    g = k // ng
+    cg = codes.reshape(o, ng, g)
+    w = (s[..., None] * (cg - z[..., None])).reshape(o, k)
+    return x @ w.T

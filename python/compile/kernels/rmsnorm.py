@@ -1,0 +1,32 @@
+"""L1 Pallas kernel: fused RMSNorm (row-tiled, weight broadcast in VMEM)."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fused_qdq_matmul import _tile
+
+
+def _kernel(eps, x_ref, w_ref, o_ref):
+    x = x_ref[...]
+    w = w_ref[...]
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(var + eps) * w
+
+
+def rmsnorm(x2d, w, eps=1e-5, br=128):
+    """RMSNorm over the last dim of x2d [rows, d]; w: [d]."""
+    rows, d = x2d.shape
+    br = _tile(rows, br)
+    import functools
+    return pl.pallas_call(
+        functools.partial(_kernel, eps),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), jnp.float32),
+        interpret=True,
+    )(x2d, w.reshape(1, d))

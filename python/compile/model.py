@@ -1,0 +1,291 @@
+"""L2: LLaMA-architecture decoder graphs and calibration steps (JAX).
+
+Everything here is lowered ONCE by aot.py to HLO text and then driven from
+the Rust coordinator; Python never runs on the request path.
+
+Parameter layout contract (mirrored by rust/src/model/params.rs):
+full-model parameters are a dict keyed by PARAM_NAMES with *stacked* block
+tensors — e.g. params["q_proj"] has shape [n_layers, d_model, d_model].
+Artifacts take these tensors as positional inputs in PARAM_NAMES order;
+the manifest emitted by aot.py records the exact shapes.
+
+Differentiability: training graphs (par_step / lwc_step / train_step) use
+the pure-jnp fake-quant path from quantize.py (pallas_call has no VJP);
+inference graphs (block_quant_fwd) route the same math through the Pallas
+kernels, and pytest ties the two paths together numerically.
+"""
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import LINEAR_NAMES, ModelConfig
+from .quantize import act_fakequant, lwc_qdq, soft_qdq
+from .kernels.fused_qdq_matmul import fused_qdq_matmul
+from .kernels.rmsnorm import rmsnorm as rmsnorm_pallas
+
+# Full-model parameter ordering (the artifact input contract).
+PARAM_NAMES: List[str] = ["emb", "norm_f"] + LINEAR_NAMES + ["norm1", "norm2"]
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+DST_WEIGHT_DECAY = 1e-4  # paper: 1e-4 weight decay on v
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    shapes = {
+        "emb": (cfg.vocab_size, cfg.d_model),
+        "norm_f": (cfg.d_model,),
+        "norm1": (cfg.n_layers, cfg.d_model),
+        "norm2": (cfg.n_layers, cfg.d_model),
+    }
+    for name, (o, i) in cfg.linear_shapes().items():
+        shapes[name] = (cfg.n_layers, o, i)
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# Core ops
+
+
+def rmsnorm(x, w, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _rope_tables(cfg: ModelConfig, t: int):
+    hd = cfg.head_dim
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = jnp.arange(t, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)  # [T, hd/2]
+
+
+def _apply_rope(x, cos, sin):
+    """x: [B, H, T, hd]; rotate-half convention (LLaMA)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[None, None, :, :]
+    s = sin[None, None, :, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def _lin3(lin, name, t):
+    """Apply a 2-D linear closure to a [..., in] tensor."""
+    flat = t.reshape(-1, t.shape[-1])
+    out = lin(name, flat)
+    return out.reshape(*t.shape[:-1], out.shape[-1])
+
+
+def block_core(x, n1, n2, lin, cfg: ModelConfig, qmax_act, ste,
+               norm_fn=rmsnorm):
+    """One decoder block: pre-norm attention + gated MLP, with per-token
+    activation fake-quant in front of every linear (paper's A-quant setup).
+
+    `lin(name, h2d)` computes h2d @ W_name.T for whichever weight
+    representation (FP / soft-quant / Pallas fused) the caller wires in.
+    """
+    b, t, d = x.shape
+    hdim = cfg.head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+
+    h = norm_fn(x, n1)
+    hq = act_fakequant(h, qmax_act, ste)
+    q = _lin3(lin, "q_proj", hq).reshape(b, t, nh, hdim).transpose(0, 2, 1, 3)
+    k = _lin3(lin, "k_proj", hq).reshape(b, t, nkv, hdim).transpose(0, 2, 1, 3)
+    v = _lin3(lin, "v_proj", hq).reshape(b, t, nkv, hdim).transpose(0, 2, 1, 3)
+
+    cos, sin = _rope_tables(cfg, t)
+    q = _apply_rope(q, cos, sin)
+    k = _apply_rope(k, cos, sin)
+    if nkv != nh:
+        rep = nh // nkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hdim))
+    mask = jnp.tril(jnp.ones((t, t), jnp.float32))
+    scores = jnp.where(mask[None, None] > 0, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, t, d)
+    ctxq = act_fakequant(ctx, qmax_act, ste)
+    x = x + _lin3(lin, "o_proj", ctxq)
+
+    h2 = norm_fn(x, n2)
+    h2q = act_fakequant(h2, qmax_act, ste)
+    gate = jax.nn.silu(_lin3(lin, "gate_proj", h2q))
+    up = _lin3(lin, "up_proj", h2q)
+    mlp = gate * up
+    mlpq = act_fakequant(mlp, qmax_act, ste)
+    return x + _lin3(lin, "down_proj", mlpq)
+
+
+# ---------------------------------------------------------------------------
+# Block forwards (teacher / student)
+
+
+def block_fp_fwd(x, n1, n2, weights: Dict[str, jax.Array], cfg: ModelConfig,
+                 qmax_act):
+    """FP teacher forward of one block (input/target collection)."""
+    lin = lambda name, h: h @ weights[name].T
+    return block_core(x, n1, n2, lin, cfg, qmax_act, ste=False)
+
+
+def block_quant_fwd(x, n1, n2, qstate: Dict[str, tuple], cfg: ModelConfig,
+                    qmax_w, qmax_act):
+    """Quantized block forward through the Pallas fused kernel (L1).
+
+    qstate[name] = (w_floor, s, z, nu, v). Used for reconstruction-loss
+    probes (Fig. 4) and quantized-block validation; not differentiated.
+    """
+    def lin(name, h):
+        wf, s, z, nu, v = qstate[name]
+        return fused_qdq_matmul(h, wf, s, z, nu, v, qmax_w)
+
+    def norm_fn(t3, w):
+        b, t, d = t3.shape
+        return rmsnorm_pallas(t3.reshape(b * t, d), w).reshape(b, t, d)
+
+    return block_core(x, n1, n2, lin, cfg, qmax_act, ste=False,
+                      norm_fn=norm_fn)
+
+
+def _block_soft_fwd(x, n1, n2, qstate, nus, vs, cfg, qmax_w, qmax_act):
+    """Differentiable student forward: materialize soft-qdq weights (jnp)."""
+    whats = {}
+    for i, name in enumerate(LINEAR_NAMES):
+        wf, s, z = qstate[name]
+        whats[name] = soft_qdq(wf, s, z, nus[i], vs[i], qmax_w)
+    lin = lambda name, h: h @ whats[name].T
+    return block_core(x, n1, n2, lin, cfg, qmax_act, ste=True)
+
+
+# ---------------------------------------------------------------------------
+# Adam helper
+
+
+def _adam(p, g, m, u, lr, t, wd=0.0):
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    u = ADAM_B2 * u + (1.0 - ADAM_B2) * g * g
+    mh = m / (1.0 - ADAM_B1 ** t)
+    uh = u / (1.0 - ADAM_B2 ** t)
+    p = p - lr * (mh / (jnp.sqrt(uh) + ADAM_EPS) + wd * p)
+    return p, m, u
+
+
+# ---------------------------------------------------------------------------
+# TesseraQ PAR soften-phase step (the paper's Eq. 7 + DST Eq. 9)
+
+
+def par_step(x, y, n1, n2, qstate, nus, vs, m_nu, u_nu, m_v, u_v,
+             lr, t, qmax_w, qmax_act, cfg: ModelConfig):
+    """One Adam step on (nu, v) against the block reconstruction MSE.
+
+    Hardened variables arrive saturated at +-SAT_NU, so their sigmoid
+    gradient is exactly zero — the paper's memory-efficient masking trick.
+    Returns (loss, nus', vs', m_nu', u_nu', m_v', u_v').
+    """
+
+    def loss_fn(nus_, vs_):
+        yh = _block_soft_fwd(x, n1, n2, qstate, nus_, vs_, cfg,
+                             qmax_w, qmax_act)
+        diff = yh - y
+        return jnp.mean(diff * diff)
+
+    loss, (g_nu, g_v) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+        tuple(nus), tuple(vs))
+    new_nus, new_m_nu, new_u_nu = [], [], []
+    new_vs, new_m_v, new_u_v = [], [], []
+    for i in range(len(LINEAR_NAMES)):
+        p, m, u = _adam(nus[i], g_nu[i], m_nu[i], u_nu[i], lr, t)
+        new_nus.append(p); new_m_nu.append(m); new_u_nu.append(u)
+        p, m, u = _adam(vs[i], g_v[i], m_v[i], u_v[i], lr, t,
+                        wd=DST_WEIGHT_DECAY)
+        new_vs.append(p); new_m_v.append(m); new_u_v.append(u)
+    return loss, new_nus, new_vs, new_m_nu, new_u_nu, new_m_v, new_u_v
+
+
+# ---------------------------------------------------------------------------
+# OmniQuant-style learnable-weight-clipping step (baseline)
+
+
+def lwc_step(x, y, n1, n2, weights, gammas, betas, m_g, u_g, m_b, u_b,
+             lr, t, qmax_w, qmax_act, cfg: ModelConfig):
+    """One Adam step on per-group clipping logits (STE through rounding)."""
+
+    def loss_fn(gs, bs):
+        whats = {}
+        for i, name in enumerate(LINEAR_NAMES):
+            whats[name] = lwc_qdq(weights[name], gs[i], bs[i], qmax_w)
+        lin = lambda name, h: h @ whats[name].T
+        yh = block_core(x, n1, n2, lin, cfg, qmax_act, ste=True)
+        diff = yh - y
+        return jnp.mean(diff * diff)
+
+    loss, (g_g, g_b) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+        tuple(gammas), tuple(betas))
+    ng_, nb_, nmg, nug, nmb, nub = [], [], [], [], [], []
+    for i in range(len(LINEAR_NAMES)):
+        p, m, u = _adam(gammas[i], g_g[i], m_g[i], u_g[i], lr, t)
+        ng_.append(p); nmg.append(m); nug.append(u)
+        p, m, u = _adam(betas[i], g_b[i], m_b[i], u_b[i], lr, t)
+        nb_.append(p); nmb.append(m); nub.append(u)
+    return loss, ng_, nb_, nmg, nug, nmb, nub
+
+
+# ---------------------------------------------------------------------------
+# Full model
+
+
+def model_apply(tokens, params: Dict[str, jax.Array], cfg: ModelConfig,
+                qmax_act):
+    """Forward to final hidden states. tokens: [B, T] int32.
+
+    Blocks run under lax.scan over the stacked [n_layers, ...] parameter
+    tensors (smaller HLO, faster AOT compile, layout matches the Rust
+    parameter store).
+    """
+    x = params["emb"][tokens]
+
+    block_keys = LINEAR_NAMES + ["norm1", "norm2"]
+    stacked = {k: params[k] for k in block_keys}
+
+    def body(x, layer):
+        lin = lambda name, h: h @ layer[name].T
+        x = block_core(x, layer["norm1"], layer["norm2"], lin, cfg,
+                       qmax_act, ste=False)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, stacked)
+    return rmsnorm(x, params["norm_f"])
+
+
+def model_nll(tokens, params, cfg: ModelConfig, qmax_act, head_t=None):
+    """Per-position next-token NLL, [B, T-1] (PPL + likelihood ranking).
+
+    head_t: optional [d, d] matrix applied between the final norm and the
+    tied head. Identity for plain models; carries diag(norm_f) and the
+    QuaRot rotation for transformed checkpoints (rust quant::rotate).
+    """
+    h = model_apply(tokens, params, cfg, qmax_act)
+    if head_t is not None:
+        h = h @ head_t
+    logits = h @ params["emb"].T  # tied head (kept FP, as in the paper)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return nll
+
+
+def train_step(tokens, params, m, u, lr, t, cfg: ModelConfig):
+    """Full-model Adam pretraining step (E2E driver; FP activations)."""
+
+    def loss_fn(p):
+        return jnp.mean(model_nll(tokens, p, cfg, jnp.float32(65535.0)))
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new_p, new_m, new_u = {}, {}, {}
+    for k in params:
+        new_p[k], new_m[k], new_u[k] = _adam(params[k], grads[k],
+                                             m[k], u[k], lr, t)
+    return loss, new_p, new_m, new_u

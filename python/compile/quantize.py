@@ -1,0 +1,155 @@
+"""Differentiable quantization math (L2, pure jnp).
+
+These functions are the single source of truth for the quantization
+semantics of the whole stack: the Pallas kernels (L1) are tested against
+them, and the Rust host-side quantizer (rust/src/quant/) mirrors them
+bit-for-bit (same clamp orders, same STE placement).
+
+Shapes convention: a linear weight is W[out, in]; groups split the *input*
+dimension, so per-group parameters are [out, n_groups] and a grouped view
+of the weight is [out, n_groups, g].
+"""
+
+import jax
+import jax.numpy as jnp
+
+# |nu| >= SAT_NU means "hardened". At 100, f32 sigmoid saturates *exactly*
+# (exp(100) == inf), so hardened logits receive exactly-zero gradients —
+# the paper's memory-efficient alternative to masking.
+SAT_NU = 100.0
+
+
+def ste_round(x):
+    """Round with a straight-through gradient (identity backward)."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def grouped(w, g):
+    """[out, in] -> [out, in//g, g] view of a weight."""
+    o, i = w.shape
+    return w.reshape(o, i // g, g)
+
+
+def ungrouped(wg):
+    o, ng, g = wg.shape
+    return wg.reshape(o, ng * g)
+
+
+def minmax_scale(w_grouped, gamma, beta, qmax):
+    """Asymmetric scale/zero-point from clipped min/max (paper Eq. 1).
+
+    gamma/beta are the clip factors on max/min, shape [out, n_groups]
+    (broadcastable). Returns (s, z) with shape [out, n_groups].
+    """
+    mx = jnp.max(w_grouped, axis=-1)
+    mn = jnp.min(w_grouped, axis=-1)
+    s = (gamma * mx - beta * mn) / qmax
+    s = jnp.maximum(s, 1e-9)
+    z = jnp.round(-beta * mn / s)
+    return s, z
+
+
+def soft_qdq(w_floor, s, z, nu, v, qmax):
+    """TesseraQ soft quant-dequant (paper Eq. 4 + Eq. 9).
+
+    w_floor: [out, in]  precomputed floor(W/s) on the group grid (f32).
+    s, z:    [out, n_groups] step size / zero point.
+    nu:      [out, in]  soft rounding logits; hardened entries are +-40.
+    v:       [out, n_groups] dequantization-scale-tuning logits.
+    qmax:    scalar, 2^N - 1 (traced, so one artifact serves all widths).
+
+    Returns the fake-quantized weight, [out, in].
+    """
+    o, i = w_floor.shape
+    ng = s.shape[1]
+    g = i // ng
+    wf = w_floor.reshape(o, ng, g)
+    alpha = jax.nn.sigmoid(nu).reshape(o, ng, g)
+    q = jnp.clip(wf + alpha + z[..., None], 0.0, qmax)
+    deq = 2.0 * jax.nn.sigmoid(v)[..., None] * s[..., None] * (q - z[..., None])
+    return deq.reshape(o, i)
+
+
+def hard_qdq(w_floor, s, z, nu, v, qmax):
+    """Post-PAR hard quant-dequant: alpha = 1[nu > 0] (paper Eq. 5/8)."""
+    o, i = w_floor.shape
+    ng = s.shape[1]
+    g = i // ng
+    wf = w_floor.reshape(o, ng, g)
+    alpha = (nu > 0.0).astype(w_floor.dtype).reshape(o, ng, g)
+    q = jnp.clip(wf + alpha + z[..., None], 0.0, qmax)
+    deq = 2.0 * jax.nn.sigmoid(v)[..., None] * s[..., None] * (q - z[..., None])
+    return deq.reshape(o, i)
+
+
+def rtn_qdq(w, s, z, qmax):
+    """Plain round-to-nearest quant-dequant on a grouped grid."""
+    o, i = w.shape
+    ng = s.shape[1]
+    g = i // ng
+    wg = w.reshape(o, ng, g)
+    q = jnp.clip(jnp.round(wg / s[..., None]) + z[..., None], 0.0, qmax)
+    return (s[..., None] * (q - z[..., None])).reshape(o, i)
+
+
+def lwc_qdq(w, gamma_raw, beta_raw, qmax):
+    """OmniQuant-style learnable weight clipping with STE rounding.
+
+    gamma_raw/beta_raw: [out, n_groups] logits; clip factors are
+    sigmoid(raw) in (0, 1], exactly as OmniQuant's LWC parameterization.
+    Differentiable w.r.t. gamma_raw/beta_raw through the STE.
+    """
+    o, i = w.shape
+    ng = gamma_raw.shape[1]
+    g = i // ng
+    wg = w.reshape(o, ng, g)
+    gamma = jax.nn.sigmoid(gamma_raw)
+    beta = jax.nn.sigmoid(beta_raw)
+    mx = jnp.max(wg, axis=-1)
+    mn = jnp.min(wg, axis=-1)
+    s = jnp.maximum((gamma * mx - beta * mn) / qmax, 1e-9)
+    z = ste_round(-beta * mn / s)
+    q = jnp.clip(ste_round(wg / s[..., None]) + z[..., None], 0.0, qmax)
+    return (s[..., None] * (q - z[..., None])).reshape(o, i)
+
+
+def act_fakequant(x, qmax, ste=False):
+    """Per-token asymmetric activation fake-quant (paper's A4/A8 setup).
+
+    x: [..., features]; one (s, z) per token (all leading dims).
+    qmax >= 60000 is treated as the FP16/A16 passthrough sentinel so a
+    single artifact serves A16/A8/A4/A3 via a runtime scalar.
+    """
+    rnd = ste_round if ste else jnp.round
+    mx = jnp.max(x, axis=-1, keepdims=True)
+    mn = jnp.min(x, axis=-1, keepdims=True)
+    s = jnp.maximum((mx - mn) / qmax, 1e-8)
+    z = rnd(-mn / s)
+    q = jnp.clip(rnd(x / s) + z, 0.0, qmax)
+    xq = s * (q - z)
+    return jnp.where(qmax >= 60000.0, x, xq)
+
+
+def nu_init(w, s, z, qmax):
+    """Initialize rounding logits so soft_qdq(w) == rtn-floor(w) + frac == w.
+
+    nu = sigmoid^-1(frac(W/s)) clipped away from {0,1} for finite logits.
+    Mirrored by rust/src/coordinator/par.rs.
+    """
+    o, i = w.shape
+    ng = s.shape[1]
+    g = i // ng
+    wg = w.reshape(o, ng, g)
+    ratio = wg / s[..., None]
+    frac = ratio - jnp.floor(ratio)
+    frac = jnp.clip(frac, 1e-4, 1.0 - 1e-4)
+    return jnp.log(frac / (1.0 - frac)).reshape(o, i)
+
+
+def w_floor_init(w, s):
+    """floor(W/s) on the group grid, [out, in] (f32)."""
+    o, i = w.shape
+    ng = s.shape[1]
+    g = i // ng
+    wg = w.reshape(o, ng, g)
+    return jnp.floor(wg / s[..., None]).reshape(o, i)

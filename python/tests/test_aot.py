@@ -1,0 +1,78 @@
+"""Artifact manifest consistency checks (the Python<->Rust contract)."""
+
+import json
+import os
+
+import pytest
+
+from compile.configs import LINEAR_NAMES, MODELS
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST),
+    reason="run `make artifacts` first")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_existing_files(manifest):
+    for a in manifest["artifacts"]:
+        path = os.path.join(ART, a["path"])
+        assert os.path.exists(path), a["name"]
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, a["name"]
+
+
+def test_param_order_contract(manifest):
+    assert manifest["param_names"] == M.PARAM_NAMES
+    assert manifest["linear_names"] == LINEAR_NAMES
+
+
+def test_par_step_io_symmetry(manifest):
+    """Every PAR-step state input has a matching output (buffer cycling)."""
+    for a in manifest["artifacts"]:
+        if a["meta"]["kind"] != "block_par_step":
+            continue
+        in_names = {i["name"] for i in a["inputs"]}
+        for out in a["outputs"]:
+            if out == "loss":
+                continue
+            assert out in in_names, (a["name"], out)
+
+
+def test_shapes_match_configs(manifest):
+    for a in manifest["artifacts"]:
+        meta = a["meta"]
+        cfg = MODELS[meta["size"]]
+        byname = {i["name"]: i for i in a["inputs"]}
+        if meta["kind"] == "model_fwd_nll":
+            assert byname["param.emb"]["shape"] == [cfg.vocab_size, cfg.d_model]
+            assert byname["param.q_proj"]["shape"] == [
+                cfg.n_layers, cfg.d_model, cfg.d_model]
+            assert byname["tokens"]["dtype"] == "int32"
+        if meta["kind"] == "block_par_step":
+            x = byname["x"]
+            assert x["shape"] == [meta["batch"], cfg.max_seq, cfg.d_model]
+            # group shapes divide linear shapes
+            for n in LINEAR_NAMES:
+                o, i = cfg.linear_shapes()[n]
+                so, sg = byname[f"s.{n}"]["shape"]
+                assert so == o and i % sg == 0
+
+
+def test_every_size_has_core_artifacts(manifest):
+    kinds = {}
+    for a in manifest["artifacts"]:
+        kinds.setdefault(a["meta"]["size"], set()).add(a["meta"]["kind"])
+    for size in ("nano", "tiny"):
+        assert {"model_train_step", "model_fwd_nll", "block_fp_fwd",
+                "block_par_step", "block_quant_fwd",
+                "block_lwc_step"} <= kinds[size]

@@ -1,0 +1,140 @@
+"""L1 Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps the kernels across shapes/group sizes/bit-widths; this
+is the primary correctness signal for the block-forward and serving hot
+paths (DESIGN.md §3, L1).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize as Q
+from compile.kernels import ref
+from compile.kernels.fused_qdq_matmul import fused_qdq_matmul, _tile
+from compile.kernels.qmatmul import qmatmul
+from compile.kernels.rmsnorm import rmsnorm
+
+SET = dict(max_examples=25, deadline=None)
+
+
+def test_tile_divides():
+    for n in (1, 2, 7, 24, 128, 768):
+        for cap in (1, 8, 128):
+            t = _tile(n, cap)
+            assert n % t == 0 and t <= max(cap, 1)
+
+
+@st.composite
+def qdq_case(draw):
+    g = draw(st.sampled_from([8, 16, 32]))
+    ng = draw(st.integers(1, 4))
+    k = g * ng
+    m = draw(st.integers(1, 48))
+    o = draw(st.integers(1, 48))
+    bits = draw(st.sampled_from([2, 3, 4, 8]))
+    seed = draw(st.integers(0, 2 ** 16))
+    return m, k, o, g, bits, seed
+
+
+@given(qdq_case())
+@settings(**SET)
+def test_fused_qdq_matmul_matches_ref(case):
+    m, k, o, g, bits, seed = case
+    rng = np.random.default_rng(seed)
+    qmax = float(2 ** bits - 1)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(o, k)).astype(np.float32))
+    ng = k // g
+    s, z = Q.minmax_scale(w.reshape(o, ng, g), 1.0, 1.0, qmax)
+    wf = Q.w_floor_init(w, s)
+    nu = Q.nu_init(w, s, z, qmax)
+    v = jnp.asarray(rng.normal(scale=0.1, size=(o, ng)).astype(np.float32))
+    got = fused_qdq_matmul(x, wf, s, z, nu, v, qmax)
+    want = ref.qdq_matmul_ref(x, wf, s, z, nu, v, qmax)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+@st.composite
+def pack_case(draw):
+    bits = draw(st.sampled_from([2, 3, 4]))
+    g = draw(st.sampled_from([16, 32, 64]))
+    ng = draw(st.integers(1, 3))
+    k = g * ng
+    m = draw(st.integers(1, 32))
+    o = draw(st.integers(1, 64))
+    seed = draw(st.integers(0, 2 ** 16))
+    return m, k, o, g, bits, seed
+
+
+def pack_np(codes, bits):
+    """Host packer mirroring rust/src/quant/pack.rs (low bits first)."""
+    o, k = codes.shape
+    per = 32 // bits
+    nw = (k + per - 1) // per
+    packed = np.zeros((o, nw), np.int64)
+    for j in range(k):
+        packed[:, j // per] |= codes[:, j].astype(np.int64) << (bits * (j % per))
+    # reinterpret as int32 (values may have bit 31 set for bits=2)
+    return packed.astype(np.uint32).view(np.int32).astype(np.int32)
+
+
+@given(pack_case())
+@settings(**SET)
+def test_qmatmul_matches_ref(case):
+    m, k, o, g, bits, seed = case
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 2 ** bits, size=(o, k))
+    packed = jnp.asarray(pack_np(codes, bits))
+    ng = k // g
+    s = jnp.asarray(rng.uniform(0.01, 0.4, size=(o, ng)).astype(np.float32))
+    z = jnp.asarray(
+        rng.integers(0, 2 ** bits, size=(o, ng)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    got = qmatmul(x, packed, s, z, bits)
+    want = ref.qmatmul_ref(x, packed, s, z, bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+@given(pack_case())
+@settings(**SET)
+def test_unpack_inverts_pack(case):
+    _, k, o, _, bits, seed = case
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 2 ** bits, size=(o, k))
+    packed = jnp.asarray(pack_np(codes, bits))
+    got = ref.unpack_codes_ref(packed, bits, k)
+    np.testing.assert_array_equal(np.asarray(got), codes)
+
+
+@given(st.integers(1, 64), st.sampled_from([16, 64, 256]),
+       st.integers(0, 2 ** 16))
+@settings(**SET)
+def test_rmsnorm_matches_ref(rows, d, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(rows, d)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    got = rmsnorm(x, w)
+    want = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_qmatmul_exact_vs_dense_dequant():
+    """Packed kernel == dense matmul against explicitly dequantized W."""
+    rng = np.random.default_rng(7)
+    o, k, g, bits = 48, 64, 16, 4
+    codes = rng.integers(0, 16, size=(o, k))
+    packed = jnp.asarray(pack_np(codes, bits))
+    ng = k // g
+    s = jnp.asarray(rng.uniform(0.01, 0.4, size=(o, ng)).astype(np.float32))
+    z = jnp.asarray(rng.integers(0, 16, size=(o, ng)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(8, k)).astype(np.float32))
+    w = (np.repeat(np.asarray(s), g, axis=1)
+         * (codes - np.repeat(np.asarray(z), g, axis=1))).astype(np.float32)
+    want = np.asarray(x) @ w.T
+    got = np.asarray(qmatmul(x, packed, s, z, bits))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)

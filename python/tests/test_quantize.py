@@ -1,0 +1,167 @@
+"""Unit tests for the differentiable quantization math (quantize.py).
+
+These semantics are mirrored bit-for-bit by rust/src/quant/; invariants
+proven here are re-proven on the Rust side with proptest.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import quantize as Q
+
+
+def mk_weight(o=16, i=32, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(o, i)).astype(np.float32))
+
+
+def mk_state(w, g, qmax, gamma=1.0, beta=1.0):
+    o, i = w.shape
+    wg = w.reshape(o, i // g, g)
+    s, z = Q.minmax_scale(wg, gamma, beta, qmax)
+    wf = Q.w_floor_init(w, s)
+    nu = Q.nu_init(w, s, z, qmax)
+    v = jnp.zeros_like(s)
+    return wf, s, z, nu, v
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("g", [8, 16, 32])
+def test_soft_qdq_init_is_identity_inside_range(bits, g):
+    """At init (nu from frac, v=0) the soft qdq reproduces W up to clamp."""
+    qmax = float(2 ** bits - 1)
+    w = mk_weight()
+    wf, s, z, nu, v = mk_state(w, g, qmax)
+    what = Q.soft_qdq(wf, s, z, nu, v, qmax)
+    # Interior points (not clamped) reconstruct to ~1e-3 * s; boundary
+    # points may clip by up to one step.
+    err = jnp.abs(what - w)
+    smax = float(jnp.max(s))
+    assert float(jnp.median(err)) < 1e-3 * smax + 1e-6
+    assert float(jnp.max(err)) < 1.5 * smax
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+def test_hard_qdq_on_integer_grid(bits):
+    """hard_qdq output lies exactly on the dequantization grid."""
+    qmax = float(2 ** bits - 1)
+    w = mk_weight()
+    wf, s, z, nu, v = mk_state(w, 16, qmax)
+    what = Q.hard_qdq(wf, s, z, nu, v, qmax)
+    o, i = w.shape
+    g = 16
+    sg = jnp.repeat(s, g, axis=1)
+    zg = jnp.repeat(z, g, axis=1)
+    codes = what / (2.0 * jax.nn.sigmoid(jnp.repeat(v, g, axis=1))) / sg + zg
+    assert float(jnp.max(jnp.abs(codes - jnp.round(codes)))) < 1e-3
+    assert float(jnp.min(codes)) >= -1e-3
+    assert float(jnp.max(codes)) <= qmax + 1e-3
+
+
+def test_rtn_error_bound():
+    """RTN error is bounded by s/2 inside the clip range."""
+    qmax = 15.0
+    w = mk_weight()
+    o, i = w.shape
+    g = 16
+    wg = w.reshape(o, i // g, g)
+    s, z = Q.minmax_scale(wg, 1.0, 1.0, qmax)
+    what = Q.rtn_qdq(w, s, z, qmax)
+    err = jnp.abs(what - w).reshape(o, i // g, g)
+    assert bool(jnp.all(err <= 0.75 * s[..., None] + 1e-6))
+
+
+def test_hard_matches_soft_when_saturated():
+    """Saturating nu at +-SAT_NU makes soft == hard exactly."""
+    qmax = 3.0
+    w = mk_weight()
+    wf, s, z, nu, v = mk_state(w, 16, qmax)
+    nu_sat = jnp.where(nu > 0, Q.SAT_NU, -Q.SAT_NU)
+    soft = Q.soft_qdq(wf, s, z, nu_sat, v, qmax)
+    hard = Q.hard_qdq(wf, s, z, nu_sat, v, qmax)
+    np.testing.assert_allclose(np.asarray(soft), np.asarray(hard),
+                               rtol=0, atol=1e-6)
+
+
+def test_saturated_nu_has_zero_gradient():
+    """The paper's masking trick: hardened (saturated) logits get grad 0."""
+    qmax = 3.0
+    w = mk_weight()
+    wf, s, z, nu, v = mk_state(w, 16, qmax)
+    nu = nu.at[0].set(Q.SAT_NU).at[1].set(-Q.SAT_NU)
+
+    def loss(nu_):
+        return jnp.sum(Q.soft_qdq(wf, s, z, nu_, v, qmax) ** 2)
+
+    g = jax.grad(loss)(nu)
+    assert float(jnp.max(jnp.abs(g[0]))) == 0.0
+    assert float(jnp.max(jnp.abs(g[1]))) == 0.0, \
+        "sigmoid must saturate exactly at -SAT_NU"
+    assert float(jnp.max(jnp.abs(g[2:]))) > 0.0
+
+
+def test_dst_scale_range():
+    """DST factor 2*sigmoid(v) stays in (0, 2) and is 1 at v=0."""
+    qmax = 3.0
+    w = mk_weight()
+    wf, s, z, nu, v = mk_state(w, 16, qmax)
+    base = Q.soft_qdq(wf, s, z, nu, v, qmax)
+    big = Q.soft_qdq(wf, s, z, nu, v + 100.0, qmax)
+    np.testing.assert_allclose(np.asarray(big), np.asarray(2.0 * base),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_lwc_qdq_grad_flows_and_shrinks_scale():
+    """LWC clip logits receive gradient through the STE."""
+    qmax = 3.0
+    w = mk_weight()
+    o, i = w.shape
+    gr = jnp.zeros((o, i // 16), jnp.float32) + 4.0  # sigmoid ~ 0.98
+    br = jnp.zeros_like(gr) + 4.0
+
+    def loss(gr_, br_):
+        return jnp.mean((Q.lwc_qdq(w, gr_, br_, qmax) - w) ** 2)
+
+    g1, g2 = jax.grad(loss, argnums=(0, 1))(gr, br)
+    assert float(jnp.max(jnp.abs(g1))) > 0.0
+    assert float(jnp.max(jnp.abs(g2))) > 0.0
+
+
+@pytest.mark.parametrize("qmax,expect_quant", [(3.0, True), (65535.0, False)])
+def test_act_fakequant_sentinel(qmax, expect_quant):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
+    xq = Q.act_fakequant(x, jnp.float32(qmax))
+    if expect_quant:
+        assert float(jnp.max(jnp.abs(xq - x))) > 1e-4
+        # per-token: each row has at most qmax+1 distinct values
+        for r in np.asarray(xq):
+            assert len(np.unique(r)) <= int(qmax) + 1
+    else:
+        np.testing.assert_array_equal(np.asarray(xq), np.asarray(x))
+
+
+def test_act_fakequant_error_shrinks_with_bits():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32))
+    errs = []
+    for bits in (3, 4, 8):
+        xq = Q.act_fakequant(x, jnp.float32(2 ** bits - 1))
+        errs.append(float(jnp.mean((xq - x) ** 2)))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_nu_init_round_trip_vs_floor():
+    """sigmoid(nu_init) == frac(W/s) away from the clip boundary."""
+    qmax = 15.0
+    w = mk_weight()
+    wf, s, z, nu, v = mk_state(w, 16, qmax)
+    o, i = w.shape
+    sg = jnp.repeat(s, 16, axis=1)
+    frac = w / sg - jnp.floor(w / sg)
+    interior = (frac > 1e-3) & (frac < 1 - 1e-3)
+    got = jax.nn.sigmoid(nu)
+    np.testing.assert_allclose(np.asarray(got[interior]),
+                               np.asarray(frac[interior]), atol=1e-4)

@@ -1,0 +1,349 @@
+//! AWQ (Lin et al. 2023): activation-aware weight scaling + asymmetric
+//! clipping, searched per linear against the layer-output MSE (Eq. 2).
+//!
+//! Scale search: s_j = mean|x_j|^alpha over a grid alpha in [0, 1); the
+//! scaled weight W diag(s) is RTN-quantized and evaluated on
+//! (x / s) @ qdq(W diag(s))^T vs x @ W^T. The chosen scales are folded
+//! into the same equivalence carriers as SmoothQuant (norm1/norm2,
+//! v_proj/up_proj rows), so the FP model is unchanged.
+//!
+//! Clip search: per-group grid over shrink factors of (gamma, beta)
+//! minimizing the activation-weighted weight reconstruction error
+//! (asymmetric clipping, following Gong et al. 2024's implementation the
+//! paper cites for its AWQ numbers).
+
+use std::collections::BTreeMap;
+
+use crate::model::hostfwd::{block_fwd, BlockFwdOpts, tap_for_linear};
+use crate::model::transform::{scale_cols, scale_rows};
+use crate::model::Params;
+use crate::quant::{minmax_scale, rtn_qdq, ClipFactors, QParams, QuantConfig};
+use crate::tensor::{linalg, Tensor};
+
+pub struct AwqResult {
+    /// chosen alpha per (layer, linear)
+    pub alphas: Vec<BTreeMap<String, f32>>,
+    /// per-linear clip factors, to be used at quantization time
+    pub clips: Vec<BTreeMap<String, (Tensor, Tensor)>>,
+}
+
+/// Sub-sample rows of a tap matrix to bound the search cost.
+fn subsample(x: &Tensor, max_rows: usize, stride_seed: usize) -> Tensor {
+    let (rows, ch) = x.dims2();
+    if rows <= max_rows {
+        return x.clone();
+    }
+    let stride = rows / max_rows;
+    let mut data = Vec::with_capacity(max_rows * ch);
+    let mut r = stride_seed % stride;
+    while data.len() < max_rows * ch && r < rows {
+        data.extend_from_slice(&x.data[r * ch..(r + 1) * ch]);
+        r += stride;
+    }
+    let n = data.len() / ch;
+    Tensor::new(vec![n, ch], data)
+}
+
+/// Per-channel mean |x|.
+fn act_mean_abs(x: &Tensor) -> Vec<f32> {
+    let (rows, ch) = x.dims2();
+    let mut m = vec![0.0f32; ch];
+    for r in 0..rows {
+        for c in 0..ch {
+            m[c] += x.data[r * ch + c].abs();
+        }
+    }
+    for v in &mut m {
+        *v /= rows as f32;
+    }
+    m
+}
+
+/// Search the AWQ scale exponent for one linear; returns (alpha, scales).
+pub fn search_scale(
+    w: &Tensor,
+    x: &Tensor,
+    qcfg: &QuantConfig,
+    grid: usize,
+) -> (f32, Vec<f32>) {
+    let (_, i) = w.dims2();
+    let g = qcfg.scheme.group_size(i);
+    let qmax = qcfg.qmax_w();
+    let act_mean = act_mean_abs(x);
+    let y_ref = linalg::matmul_bt(x, w);
+    let mut best = (f32::INFINITY, 0.0f32, vec![1.0f32; i]);
+    for gi in 0..grid {
+        let alpha = gi as f32 / grid as f32;
+        let s: Vec<f32> =
+            act_mean.iter().map(|&a| a.max(1e-5).powf(alpha).clamp(1e-4, 1e4)).collect();
+        let mut ws = w.clone();
+        scale_cols(&mut ws, &s);
+        let qp = minmax_scale(&ws, g, &ClipFactors::Uniform(1.0), &ClipFactors::Uniform(1.0), qmax);
+        let wq = rtn_qdq(&ws, &qp, qmax);
+        // y = (x / s) @ wq^T
+        let mut xs = x.clone();
+        let inv: Vec<f32> = s.iter().map(|v| 1.0 / v).collect();
+        scale_cols(&mut xs, &inv);
+        let y = linalg::matmul_bt(&xs, &wq);
+        let err = y.mse(&y_ref) as f32;
+        if err < best.0 {
+            best = (err, alpha, s);
+        }
+    }
+    (best.1, best.2)
+}
+
+/// Asymmetric per-group clip search on the (already scaled) weight,
+/// minimizing sum_j actnorm_j * (w_ij - qdq(w)_ij)^2 per group.
+pub fn search_clip(
+    w: &Tensor,
+    act_mean: &[f32],
+    qcfg: &QuantConfig,
+    grid: usize,
+) -> (Tensor, Tensor) {
+    let (o, i) = w.dims2();
+    let g = qcfg.scheme.group_size(i);
+    let ng = i / g;
+    let qmax = qcfg.qmax_w();
+    let mut gamma = Tensor::full(&[o, ng], 1.0);
+    let mut beta = Tensor::full(&[o, ng], 1.0);
+    for r in 0..o {
+        for gi in 0..ng {
+            let seg = &w.data[r * i + gi * g..r * i + (gi + 1) * g];
+            let aw = &act_mean[gi * g..(gi + 1) * g];
+            let mx = seg.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            let mn = seg.iter().fold(f32::INFINITY, |m, &v| m.min(v));
+            let mut best = (f32::INFINITY, 1.0f32, 1.0f32);
+            for a in 0..grid {
+                let ga = 1.0 - a as f32 * 0.5 / grid as f32; // [0.5, 1.0]
+                for b in 0..grid {
+                    let be = 1.0 - b as f32 * 0.5 / grid as f32;
+                    let s = ((ga * mx - be * mn) / qmax).max(1e-9);
+                    let z = crate::quant::round_te(-be * mn / s);
+                    let mut err = 0.0f32;
+                    for (t, &wv) in seg.iter().enumerate() {
+                        let q = (crate::quant::round_te(wv / s) + z).clamp(0.0, qmax);
+                        let d = wv - s * (q - z);
+                        err += aw[t] * d * d;
+                    }
+                    if err < best.0 {
+                        best = (err, ga, be);
+                    }
+                }
+            }
+            gamma.data[r * ng + gi] = best.1;
+            beta.data[r * ng + gi] = best.2;
+        }
+    }
+    (gamma, beta)
+}
+
+/// Run AWQ over the whole model, folding scales into carriers and
+/// returning the clip factors to use when quantizing.
+pub fn awq_transform(
+    params: &mut Params,
+    calib_x: &Tensor,
+    qcfg: &QuantConfig,
+    scale_grid: usize,
+    clip_grid: usize,
+) -> AwqResult {
+    let cfg = params.cfg.clone();
+    let mut x = calib_x.clone();
+    let mut alphas = Vec::new();
+    let mut clips = Vec::new();
+    for l in 0..cfg.n_layers {
+        let opts = BlockFwdOpts { act_qmax: None, collect: true };
+        let (y, taps) = block_fwd(&x, &params.block(l), &cfg, &opts);
+
+        let mut layer_alphas = BTreeMap::new();
+        // Group scale searches by carrier site so the fold stays exact.
+        // qkv site: one shared scale (searched on q_proj, the largest
+        // consumer), folded into norm1.
+        let site_defs: [(&str, &[&str]); 4] = [
+            ("qkv_in", &["q_proj", "k_proj", "v_proj"]),
+            ("o_in", &["o_proj"]),
+            ("mlp_in", &["gate_proj", "up_proj"]),
+            ("down_in", &["down_proj"]),
+        ];
+        for (tap, members) in site_defs {
+            let xs = subsample(&taps[tap], 512, l);
+            let (alpha, s) = search_scale(&params.get(members[0]).index0(l), &xs, qcfg, scale_grid);
+            for name in members {
+                layer_alphas.insert(name.to_string(), alpha);
+                let mut w = params.get(name).index0(l);
+                scale_cols(&mut w, &s);
+                params.set_block_linear(l, name, &w);
+            }
+            let inv: Vec<f32> = s.iter().map(|v| 1.0 / v).collect();
+            match tap {
+                "qkv_in" => {
+                    let mut n1 = params.get("norm1").index0(l);
+                    for (nv, iv) in n1.data.iter_mut().zip(&inv) {
+                        *nv *= iv;
+                    }
+                    params.get_mut("norm1").set_index0(l, &n1);
+                }
+                "mlp_in" => {
+                    let mut n2 = params.get("norm2").index0(l);
+                    for (nv, iv) in n2.data.iter_mut().zip(&inv) {
+                        *nv *= iv;
+                    }
+                    params.get_mut("norm2").set_index0(l, &n2);
+                }
+                "o_in" => {
+                    // fold into v rows (average across GQA repeats)
+                    let rep = cfg.n_heads / cfg.n_kv_heads;
+                    let hd = cfg.head_dim();
+                    let mut vinv = vec![0.0f32; cfg.d_kv()];
+                    for kvh in 0..cfg.n_kv_heads {
+                        for t in 0..hd {
+                            let mut acc = 0.0;
+                            for r in 0..rep {
+                                acc += inv[(kvh * rep + r) * hd + t];
+                            }
+                            vinv[kvh * hd + t] = acc / rep as f32;
+                        }
+                    }
+                    let mut wv = params.get("v_proj").index0(l);
+                    scale_rows(&mut wv, &vinv);
+                    params.set_block_linear(l, "v_proj", &wv);
+                }
+                "down_in" => {
+                    let mut wu = params.get("up_proj").index0(l);
+                    scale_rows(&mut wu, &inv);
+                    params.set_block_linear(l, "up_proj", &wu);
+                }
+                _ => unreachable!(),
+            }
+        }
+
+        // clip search per linear on the transformed weights
+        let mut layer_clips = BTreeMap::new();
+        for (name, _) in cfg.linear_shapes() {
+            let xs = subsample(&taps[tap_for_linear(name)], 256, l);
+            let am = act_mean_abs(&xs);
+            let w = params.get(name).index0(l);
+            let (gm, bt) = search_clip(&w, &am, qcfg, clip_grid);
+            layer_clips.insert(name.to_string(), (gm, bt));
+        }
+
+        alphas.push(layer_alphas);
+        clips.push(layer_clips);
+        x = y;
+    }
+    AwqResult { alphas, clips }
+}
+
+/// RTN-quantize all linears using AWQ clip factors (the "AWQ" baseline
+/// rows in the tables). Returns per-linear QParams for later reuse.
+pub fn quantize_with_clips(
+    params: &mut Params,
+    clips: &[BTreeMap<String, (Tensor, Tensor)>],
+    qcfg: &QuantConfig,
+) -> Vec<BTreeMap<String, QParams>> {
+    let cfg = params.cfg.clone();
+    let qmax = qcfg.qmax_w();
+    let mut out = Vec::new();
+    for l in 0..cfg.n_layers {
+        let mut layer = BTreeMap::new();
+        for (name, (o, i)) in cfg.linear_shapes() {
+            let g = qcfg.scheme.group_size(i);
+            let w = params.get(name).index0(l);
+            let (gm, bt) = &clips[l][name];
+            let qp = minmax_scale(
+                &w,
+                g,
+                &ClipFactors::PerGroup(gm.clone()),
+                &ClipFactors::PerGroup(bt.clone()),
+                qmax,
+            );
+            let wq = rtn_qdq(&w, &qp, qmax);
+            params.set_block_linear(l, name, &wq);
+            layer.insert(name.to_string(), qp);
+            let _ = o;
+        }
+        out.push(layer);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::quant::GroupScheme;
+    use crate::tensor::Pcg32;
+
+    #[test]
+    fn awq_transform_preserves_fp_function() {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let mut rng = Pcg32::seeded(0);
+        let mut p = Params::init(&cfg, &mut rng);
+        let x = Tensor::randn(&[2, 16, cfg.d_model], 1.0, &mut rng);
+        let run = |p: &Params| {
+            let mut h = x.clone();
+            for l in 0..cfg.n_layers {
+                h = block_fwd(&h, &p.block(l), &cfg, &BlockFwdOpts::default()).0;
+            }
+            h
+        };
+        let y0 = run(&p);
+        let qcfg = QuantConfig::weight_only(3, GroupScheme::Group(32));
+        awq_transform(&mut p, &x, &qcfg, 8, 4);
+        let y1 = run(&p);
+        assert!(y0.mse(&y1) < 1e-6, "AWQ fold broke equivalence: {}", y0.mse(&y1));
+    }
+
+    #[test]
+    fn awq_beats_plain_rtn_on_outlier_inputs() {
+        // Craft a layer whose input has a huge outlier channel: AWQ's
+        // activation-aware scaling must reduce quantized output MSE.
+        let mut rng = Pcg32::seeded(1);
+        let (o, i) = (32, 64);
+        let w = Tensor::randn(&[o, i], 1.0, &mut rng);
+        let mut x = Tensor::randn(&[128, i], 1.0, &mut rng);
+        for r in 0..128 {
+            x.data[r * i + 5] *= 40.0; // salient channel
+        }
+        let qcfg = QuantConfig::weight_only(2, GroupScheme::Group(32));
+        let qmax = qcfg.qmax_w();
+        let y_ref = linalg::matmul_bt(&x, &w);
+        // plain RTN
+        let qp = minmax_scale(&w, 32, &ClipFactors::Uniform(1.0), &ClipFactors::Uniform(1.0), qmax);
+        let y_rtn = linalg::matmul_bt(&x, &rtn_qdq(&w, &qp, qmax));
+        // AWQ scale
+        let (_, s) = search_scale(&w, &x, &qcfg, 16);
+        let mut ws = w.clone();
+        scale_cols(&mut ws, &s);
+        let qps = minmax_scale(&ws, 32, &ClipFactors::Uniform(1.0), &ClipFactors::Uniform(1.0), qmax);
+        let wq = rtn_qdq(&ws, &qps, qmax);
+        let mut xs = x.clone();
+        let inv: Vec<f32> = s.iter().map(|v| 1.0 / v).collect();
+        scale_cols(&mut xs, &inv);
+        let y_awq = linalg::matmul_bt(&xs, &wq);
+        let e_rtn = y_rtn.mse(&y_ref);
+        let e_awq = y_awq.mse(&y_ref);
+        assert!(e_awq < e_rtn, "AWQ {e_awq} !< RTN {e_rtn}");
+    }
+
+    #[test]
+    fn clip_search_improves_weighted_error() {
+        let mut rng = Pcg32::seeded(2);
+        let (o, i) = (16, 32);
+        let mut w = Tensor::randn(&[o, i], 1.0, &mut rng);
+        // inject rare huge weights that blow up the RTN step size
+        w.data[3] = 12.0;
+        w.data[40] = -9.0;
+        let am = vec![1.0f32; i];
+        let qcfg = QuantConfig::weight_only(2, GroupScheme::PerChannel);
+        let qmax = qcfg.qmax_w();
+        let err_of = |gm: &ClipFactors, bt: &ClipFactors| {
+            let qp = minmax_scale(&w, 32, gm, bt, qmax);
+            rtn_qdq(&w, &qp, qmax).mse(&w)
+        };
+        let base = err_of(&ClipFactors::Uniform(1.0), &ClipFactors::Uniform(1.0));
+        let (gm, bt) = search_clip(&w, &am, &qcfg, 8);
+        let clipped = err_of(&ClipFactors::PerGroup(gm), &ClipFactors::PerGroup(bt));
+        assert!(clipped <= base, "clip {clipped} !<= base {base}");
+    }
+}

@@ -1,0 +1,176 @@
+//! GPTQ (Frantar et al. 2022): column-wise optimal quantization with
+//! Hessian-based error compensation, implemented from the paper's
+//! equations in f64 (damped Cholesky inverse of H = X^T X).
+//!
+//! Per column j (in order): quantize w_j, compute the residual
+//! delta = (w_j - q_j) / [H^-1]_{jj}, and update remaining columns
+//! w_k -= delta * [H^-1]_{jk}. Group scales are (re)computed when a group
+//! boundary is entered, matching the per-group GPTQ variant.
+
+use crate::quant::{minmax_scale, round_te, ClipFactors, QParams, QuantConfig};
+use crate::tensor::linalg::{cholesky_inplace, gram_f64, spd_inverse_from_cholesky};
+use crate::tensor::Tensor;
+
+pub struct GptqOutput {
+    /// Fake-quantized weight [out, in].
+    pub wq: Tensor,
+    /// Group quant params actually used.
+    pub qp: QParams,
+}
+
+/// Quantize one linear with GPTQ given its input activations x [rows, in].
+pub fn gptq_linear(
+    w: &Tensor,
+    x: &Tensor,
+    qcfg: &QuantConfig,
+    damp: f64,
+) -> GptqOutput {
+    let (o, i) = w.dims2();
+    let g = qcfg.scheme.group_size(i);
+    let ng = i / g;
+    let qmax = qcfg.qmax_w();
+
+    // H = X^T X + damp * mean(diag) * I
+    let mut h = gram_f64(x);
+    let mean_diag: f64 =
+        (0..i).map(|t| h[t * i + t]).sum::<f64>() / i as f64;
+    let lambda = (damp * mean_diag).max(1e-8);
+    for t in 0..i {
+        h[t * i + t] += lambda;
+    }
+    cholesky_inplace(&mut h, i).expect("damped Hessian must be SPD");
+    let hinv = spd_inverse_from_cholesky(&h, i);
+
+    // Working copy in f64 for stable error propagation.
+    let mut wf: Vec<f64> = w.data.iter().map(|&v| v as f64).collect();
+    let mut s = Tensor::zeros(&[o, ng]);
+    let mut z = Tensor::zeros(&[o, ng]);
+    let mut wq = vec![0.0f32; o * i];
+
+    for j in 0..i {
+        let gi = j / g;
+        if j % g == 0 {
+            // (re)compute group scales from the *current* residual weights
+            let cur = Tensor::new(
+                vec![o, g],
+                (0..o)
+                    .flat_map(|r| {
+                        wf[r * i + gi * g..r * i + (gi + 1) * g]
+                            .iter()
+                            .map(|&v| v as f32)
+                            .collect::<Vec<_>>()
+                    })
+                    .collect(),
+            );
+            let qp = minmax_scale(
+                &cur,
+                g,
+                &ClipFactors::Uniform(1.0),
+                &ClipFactors::Uniform(1.0),
+                qmax,
+            );
+            for r in 0..o {
+                s.data[r * ng + gi] = qp.s.data[r];
+                z.data[r * ng + gi] = qp.z.data[r];
+            }
+        }
+        let hjj = hinv[j * i + j];
+        for r in 0..o {
+            let sv = s.data[r * ng + gi] as f64;
+            let zv = z.data[r * ng + gi] as f64;
+            let wv = wf[r * i + j];
+            let q = (round_te((wv / sv) as f32) as f64 + zv).clamp(0.0, qmax as f64);
+            let deq = sv * (q - zv);
+            wq[r * i + j] = deq as f32;
+            let err = (wv - deq) / hjj;
+            // propagate to the remaining columns
+            for k in (j + 1)..i {
+                wf[r * i + k] -= err * hinv[j * i + k];
+            }
+        }
+    }
+
+    GptqOutput {
+        wq: Tensor::new(vec![o, i], wq),
+        qp: QParams { s, z, group: g },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{rtn_qdq, GroupScheme};
+    use crate::tensor::{linalg, Pcg32};
+
+    fn layer_err(x: &Tensor, w: &Tensor, wq: &Tensor) -> f64 {
+        let y = linalg::matmul_bt(x, w);
+        let yq = linalg::matmul_bt(x, wq);
+        yq.mse(&y)
+    }
+
+    #[test]
+    fn gptq_beats_rtn_on_layer_objective() {
+        let mut rng = Pcg32::seeded(0);
+        let (o, i) = (24, 48);
+        let w = Tensor::randn(&[o, i], 1.0, &mut rng);
+        // correlated inputs: where GPTQ's error compensation pays off
+        let base = Tensor::randn(&[256, 8], 1.0, &mut rng);
+        let mixer = Tensor::randn(&[i, 8], 1.0, &mut rng);
+        let mut x = linalg::matmul_bt(&base, &mixer); // [256, i], rank 8
+        for v in x.data.iter_mut() {
+            *v += 0.05 * rng.normal() as f32; // small noise
+        }
+        let qcfg = QuantConfig::weight_only(2, GroupScheme::Group(16));
+        let qmax = qcfg.qmax_w();
+        let qp = minmax_scale(&w, 16, &ClipFactors::Uniform(1.0),
+                              &ClipFactors::Uniform(1.0), qmax);
+        let w_rtn = rtn_qdq(&w, &qp, qmax);
+        let out = gptq_linear(&w, &x, &qcfg, 0.01);
+        let e_rtn = layer_err(&x, &w, &w_rtn);
+        let e_gptq = layer_err(&x, &w, &out.wq);
+        assert!(
+            e_gptq < e_rtn * 0.9,
+            "GPTQ {e_gptq} should beat RTN {e_rtn} by >10%"
+        );
+    }
+
+    #[test]
+    fn gptq_output_is_on_grid() {
+        let mut rng = Pcg32::seeded(1);
+        let (o, i) = (8, 32);
+        let w = Tensor::randn(&[o, i], 1.0, &mut rng);
+        let x = Tensor::randn(&[64, i], 1.0, &mut rng);
+        let qcfg = QuantConfig::weight_only(3, GroupScheme::Group(16));
+        let out = gptq_linear(&w, &x, &qcfg, 0.01);
+        let ng = 2;
+        for r in 0..o {
+            for c in 0..i {
+                let s = out.qp.s.data[r * ng + c / 16];
+                let z = out.qp.z.data[r * ng + c / 16];
+                let code = out.wq.data[r * i + c] / s + z;
+                assert!(
+                    (code - code.round()).abs() < 1e-3,
+                    "({r},{c}) code {code} off-grid"
+                );
+                assert!(code.round() >= -0.5 && code.round() <= 7.5);
+            }
+        }
+    }
+
+    #[test]
+    fn gptq_handles_rank_deficient_inputs() {
+        // all-identical rows: H is rank 1; damping must keep it SPD
+        let mut rng = Pcg32::seeded(2);
+        let (o, i) = (4, 16);
+        let w = Tensor::randn(&[o, i], 1.0, &mut rng);
+        let row: Vec<f32> = (0..i).map(|_| rng.normal() as f32).collect();
+        let mut xd = Vec::new();
+        for _ in 0..32 {
+            xd.extend_from_slice(&row);
+        }
+        let x = Tensor::new(vec![32, i], xd);
+        let qcfg = QuantConfig::weight_only(4, GroupScheme::PerChannel);
+        let out = gptq_linear(&w, &x, &qcfg, 0.01);
+        assert!(out.wq.data.iter().all(|v| v.is_finite()));
+    }
+}

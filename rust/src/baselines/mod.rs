@@ -1,0 +1,7 @@
+//! PTQ baselines the paper compares against (Tables 1-4, Fig. 2):
+//! RTN (in quant/), AWQ scale+clip search, GPTQ (Hessian/Cholesky),
+//! OmniQuant-style LWC (driver in coordinator/lwc.rs, step artifact at L2)
+//! and SmoothQuant / QuaRot (in quant/).
+
+pub mod awq;
+pub mod gptq;

@@ -1,0 +1,163 @@
+//! OmniQuant-style Learnable Weight Clipping baseline: block-wise
+//! reconstruction over per-group clip logits (gamma, beta) with STE,
+//! driven through the `block_lwc_step` artifact. Produces the clip
+//! factors TesseraQ uses for its W2A16 initialization (paper §4.1).
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::par::BlockClips;
+use crate::coordinator::pipeline::{BlockRunner, CalibSet};
+use crate::model::{Params, LINEAR_NAMES};
+use crate::quant::{self, minmax_scale, rtn_qdq, ClipFactors, QuantConfig};
+use crate::runtime::{Arg, Engine};
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct LwcConfig {
+    pub qcfg: QuantConfig,
+    pub steps: usize,
+    pub lr: f32,
+    pub propagate_act_quant: bool,
+}
+
+impl LwcConfig {
+    pub fn standard(qcfg: QuantConfig) -> Self {
+        LwcConfig { qcfg, steps: 120, lr: 5e-2, propagate_act_quant: false }
+    }
+
+    pub fn fast(qcfg: QuantConfig) -> Self {
+        LwcConfig { steps: 24, ..Self::standard(qcfg) }
+    }
+}
+
+pub struct LwcReport {
+    /// learned per-block clip factors (sigmoid of the raw logits)
+    pub clips: Vec<BlockClips>,
+    pub losses: Vec<Vec<f32>>,
+}
+
+/// Run LWC calibration in place (weights become fake-quantized) and
+/// return the learned clips (reusable as a TesseraQ initializer).
+pub fn calibrate_lwc(
+    eng: &Engine,
+    params: &mut Params,
+    tokens: &[i32],
+    n_seq: usize,
+    lcfg: &LwcConfig,
+) -> Result<LwcReport> {
+    let size = params.cfg.name.clone();
+    let scheme = lcfg.qcfg.scheme.tag();
+    let runner = BlockRunner::new(eng, &size)?;
+    let art = eng
+        .artifact(&format!("block_lwc_step.{size}.{scheme}"))
+        .with_context(|| format!("no LWC artifact for {size}/{scheme}"))?;
+    let batch = art.spec.meta.batch.unwrap_or(4);
+    ensure!(n_seq % batch == 0);
+
+    let qmax_w = lcfg.qcfg.qmax_w();
+    let qmax_act = lcfg.qcfg.qmax_act();
+    let mut set = CalibSet::from_tokens(params, tokens, n_seq);
+    let mut clips_out = Vec::new();
+    let mut losses_out = Vec::new();
+
+    for l in 0..params.cfg.n_layers {
+        let bw = params.block(l);
+        let y_all = runner.forward_all(&bw, &set, quant::A16_SENTINEL)?;
+
+        // state: raw logits init 4.0 (sigmoid ~ 0.982, near-identity clip)
+        let mut gam: BTreeMap<String, Tensor> = BTreeMap::new();
+        let mut bet: BTreeMap<String, Tensor> = BTreeMap::new();
+        let mut adam: BTreeMap<String, [Tensor; 4]> = BTreeMap::new();
+        for name in LINEAR_NAMES {
+            let w = &bw.linears[name];
+            let g = lcfg.qcfg.scheme.group_size(w.shape[1]);
+            let ng = w.shape[1] / g;
+            let shape = vec![w.shape[0], ng];
+            gam.insert(name.to_string(), Tensor::full(&shape, 4.0));
+            bet.insert(name.to_string(), Tensor::full(&shape, 4.0));
+            adam.insert(
+                name.to_string(),
+                [
+                    Tensor::zeros(&shape),
+                    Tensor::zeros(&shape),
+                    Tensor::zeros(&shape),
+                    Tensor::zeros(&shape),
+                ],
+            );
+        }
+
+        let mut losses = Vec::new();
+        for t in 1..=lcfg.steps {
+            let bi = t - 1;
+            let xb = set.batch(bi, batch);
+            let per = set.t * set.d * batch;
+            let start = (bi % set.n_batches(batch)) * per;
+            let yb = Tensor::new(
+                vec![batch, set.t, set.d],
+                y_all.data[start..start + per].to_vec(),
+            );
+
+            let mut args: Vec<Arg> =
+                vec![Arg::F32(&xb), Arg::F32(&yb), Arg::F32(&bw.norm1), Arg::F32(&bw.norm2)];
+            for name in LINEAR_NAMES {
+                args.push(Arg::F32(&bw.linears[name]));
+            }
+            for name in LINEAR_NAMES {
+                args.push(Arg::F32(&gam[name]));
+            }
+            for name in LINEAR_NAMES {
+                args.push(Arg::F32(&bet[name]));
+            }
+            for s in 0..4 {
+                for name in LINEAR_NAMES {
+                    args.push(Arg::F32(&adam[name][s]));
+                }
+            }
+            args.push(Arg::Scalar(lcfg.lr));
+            args.push(Arg::Scalar(t as f32));
+            args.push(Arg::Scalar(qmax_w));
+            args.push(Arg::Scalar(qmax_act));
+
+            let outs = eng.run(&art, &args)?;
+            losses.push(outs[0].data[0]);
+            let n = LINEAR_NAMES.len();
+            for (li, name) in LINEAR_NAMES.iter().enumerate() {
+                gam.insert(name.to_string(), outs[1 + li].clone());
+                bet.insert(name.to_string(), outs[1 + n + li].clone());
+                let st = adam.get_mut(*name).unwrap();
+                for s in 0..4 {
+                    st[s] = outs[1 + (2 + s) * n + li].clone();
+                }
+            }
+        }
+
+        // merge: RTN with learned clips
+        let mut block_clips: BlockClips = BTreeMap::new();
+        for name in LINEAR_NAMES {
+            let w = &bw.linears[name];
+            let g = lcfg.qcfg.scheme.group_size(w.shape[1]);
+            let gm = gam[name].map(quant::sigmoid);
+            let bt = bet[name].map(quant::sigmoid);
+            let qp = minmax_scale(
+                w,
+                g,
+                &ClipFactors::PerGroup(gm.clone()),
+                &ClipFactors::PerGroup(bt.clone()),
+                qmax_w,
+            );
+            let wq = rtn_qdq(w, &qp, qmax_w);
+            params.set_block_linear(l, name, &wq);
+            block_clips.insert(name.to_string(), (gm, bt));
+        }
+        clips_out.push(block_clips);
+        losses_out.push(losses);
+
+        let bw_q = params.block(l);
+        let prop = if lcfg.propagate_act_quant { qmax_act } else { quant::A16_SENTINEL };
+        set.x = runner.forward_all(&bw_q, &set, prop)?;
+    }
+
+    Ok(LwcReport { clips: clips_out, losses: losses_out })
+}

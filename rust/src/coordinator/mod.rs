@@ -1,0 +1,14 @@
+//! The TesseraQ calibration coordinator — the paper's system contribution
+//! at L3. Owns the block-wise reconstruction pipeline: teacher forwards,
+//! PAR harden/soften scheduling, DST, merging, and the OmniQuant-LWC
+//! baseline driver. The per-step math executes inside AOT artifacts
+//! (block_par_step / block_lwc_step / block_fp_fwd).
+
+pub mod lwc;
+pub mod par;
+pub mod pipeline;
+pub mod pretrain;
+pub mod schedule;
+
+pub use par::{calibrate_tesseraq, BlockTrace, CalibReport, TesseraqConfig};
+pub use schedule::Schedule;

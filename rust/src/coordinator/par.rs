@@ -1,0 +1,469 @@
+//! TesseraQ calibration: Progressive Adaptive Rounding + Dequantization
+//! Scale Tuning over block-wise reconstruction (paper Algorithm 1).
+//!
+//! Host side owns the PAR state (nu, v, Adam moments) and the harden
+//! phase (HS scoring + saturation at +-SAT_NU); each soften-phase step
+//! executes the AOT `block_par_step` artifact. Hardened logits receive
+//! exactly-zero gradients inside the artifact, so no masking is needed —
+//! the paper's memory-efficient trick.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::pipeline::{BlockRunner, CalibSet};
+use crate::coordinator::schedule::Schedule;
+use crate::model::{Params, LINEAR_NAMES};
+use crate::quant::{
+    self, dequant_codes, dst_effective_scale, hard_codes, minmax_scale, nu_init,
+    w_floor, ClipFactors, QParams, QuantConfig, SAT_NU,
+};
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct TesseraqConfig {
+    pub qcfg: QuantConfig,
+    /// PAR iterations (paper K = 20; scaled down for the tiny testbed).
+    pub iterations: usize,
+    /// Soften-phase Adam steps per iteration (paper T = 250).
+    pub steps_per_iter: usize,
+    pub lr: f32,
+    pub schedule: Schedule,
+    /// Ablation switches (Table 6).
+    pub enable_par: bool,
+    pub enable_dst: bool,
+    /// Quantize the propagated stream with the target act bits.
+    pub propagate_act_quant: bool,
+    /// Artifact name suffix selecting a batch-size variant (Table 5),
+    /// e.g. ".b1" -> block_par_step.<size>.<scheme>.b1.
+    pub artifact_suffix: String,
+}
+
+impl TesseraqConfig {
+    pub fn standard(qcfg: QuantConfig) -> Self {
+        TesseraqConfig {
+            qcfg,
+            iterations: 8,
+            steps_per_iter: 24,
+            lr: 1e-2,
+            schedule: Schedule::Handcrafted,
+            enable_par: true,
+            enable_dst: true,
+            propagate_act_quant: false,
+            artifact_suffix: String::new(),
+        }
+    }
+
+    /// Fast preset for tests/CI.
+    pub fn fast(qcfg: QuantConfig) -> Self {
+        TesseraqConfig { iterations: 4, steps_per_iter: 8, ..Self::standard(qcfg) }
+    }
+}
+
+/// Per-block calibration record (Fig. 4 traces + Table 7 flip stats).
+#[derive(Debug, Clone)]
+pub struct BlockTrace {
+    pub layer: usize,
+    /// reconstruction MSE after each soften step
+    pub losses: Vec<f32>,
+    /// per linear: (flipped vs RTN, total rounding variables)
+    pub flips: BTreeMap<String, (usize, usize)>,
+    /// loss right before any optimization (RTN-equivalent start)
+    pub initial_loss: f32,
+}
+
+pub struct CalibReport {
+    pub per_block: Vec<BlockTrace>,
+    /// per block, per linear: final integer codes + effective dequant
+    /// params (s_eff = 2*sigmoid(v)*s) — ready for packing/serving.
+    pub quantized: Vec<BTreeMap<String, (Vec<u16>, QParams)>>,
+    pub wall_s: f64,
+}
+
+struct LinearState {
+    o: usize,
+    i: usize,
+    qp: QParams,
+    wf: Tensor,
+    nu: Tensor,
+    v: Tensor,
+    m_nu: Tensor,
+    u_nu: Tensor,
+    m_v: Tensor,
+    u_v: Tensor,
+}
+
+impl LinearState {
+    fn init(w: &Tensor, qp: QParams, hardened_start: bool) -> LinearState {
+        let (o, i) = w.dims2();
+        let wf = w_floor(w, &qp);
+        let mut nu = nu_init(w, &qp);
+        if hardened_start {
+            for x in nu.data.iter_mut() {
+                *x = if *x > 0.0 { SAT_NU } else { -SAT_NU };
+            }
+        }
+        let gshape = qp.s.shape.clone();
+        LinearState {
+            o,
+            i,
+            wf,
+            nu: nu.clone(),
+            v: Tensor::zeros(&gshape),
+            m_nu: Tensor::zeros(&nu.shape),
+            u_nu: Tensor::zeros(&nu.shape),
+            m_v: Tensor::zeros(&gshape),
+            u_v: Tensor::zeros(&gshape),
+            qp,
+        }
+    }
+}
+
+/// Optional per-linear clip factors from an initializer (AWQ / LWC).
+pub type BlockClips = BTreeMap<String, (Tensor, Tensor)>;
+
+/// Run TesseraQ over the whole model in place. `clips[l]` supplies the
+/// (gamma, beta) per-group clip factors from the initializer (None ->
+/// plain min/max). Weights in `params` must already carry any scale
+/// transformation (AWQ fold) — exactly the paper's Fig. 1(a) flow.
+pub fn calibrate_tesseraq(
+    eng: &Engine,
+    params: &mut Params,
+    clips: Option<&[BlockClips]>,
+    tokens: &[i32],
+    n_seq: usize,
+    tcfg: &TesseraqConfig,
+) -> Result<CalibReport> {
+    let t0 = std::time::Instant::now();
+    let size = params.cfg.name.clone();
+    let scheme = tcfg.qcfg.scheme.tag();
+    let runner = BlockRunner::new(eng, &size)?;
+    let step_art = eng
+        .artifact(&format!("block_par_step.{size}.{scheme}{}", tcfg.artifact_suffix))
+        .with_context(|| format!("no PAR artifact for {size}/{scheme}"))?;
+    let batch = step_art.spec.meta.batch.unwrap_or(4);
+    ensure!(n_seq % batch == 0, "n_seq {n_seq} not divisible by batch {batch}");
+
+    let qmax_w = tcfg.qcfg.qmax_w();
+    let qmax_act = tcfg.qcfg.qmax_act();
+    let mut set = CalibSet::from_tokens(params, tokens, n_seq);
+    let mut per_block = Vec::new();
+    let mut quantized = Vec::new();
+
+    for l in 0..params.cfg.n_layers {
+        let bw = params.block(l);
+        // teacher target on the (quantized-prefix) stream, FP weights
+        let y_all = runner.forward_all(&bw, &set, quant::A16_SENTINEL)?;
+
+        // per-linear PAR state
+        let mut states: BTreeMap<String, LinearState> = BTreeMap::new();
+        for name in LINEAR_NAMES {
+            let w = &bw.linears[name];
+            let g = tcfg.qcfg.scheme.group_size(w.shape[1]);
+            let qp = match clips.and_then(|c| c[l].get(name)) {
+                Some((gm, bt)) => minmax_scale(
+                    w,
+                    g,
+                    &ClipFactors::PerGroup(gm.clone()),
+                    &ClipFactors::PerGroup(bt.clone()),
+                    qmax_w,
+                ),
+                None => minmax_scale(
+                    w,
+                    g,
+                    &ClipFactors::Uniform(1.0),
+                    &ClipFactors::Uniform(1.0),
+                    qmax_w,
+                ),
+            };
+            states.insert(name.to_string(), LinearState::init(w, qp, !tcfg.enable_par));
+        }
+
+        let total_vars: usize = states.values().map(|s| s.nu.data.len()).sum();
+        let mut trace = BlockTrace {
+            layer: l,
+            losses: Vec::new(),
+            flips: BTreeMap::new(),
+            initial_loss: f32::NAN,
+        };
+
+        // per-block constants live on device for the whole PAR loop
+        let consts = BlockConstBufs::new(eng, &bw.norm1, &bw.norm2, &states,
+                                         qmax_w, qmax_act)?;
+
+        // PAR loop
+        let mut t_global = 0u32;
+        for k in 1..=tcfg.iterations {
+            if tcfg.enable_par {
+                let soft = tcfg.schedule.soft_rate(k, tcfg.iterations);
+                let target_hard =
+                    total_vars - (soft * total_vars as f32).ceil() as usize;
+                harden(&mut states, target_hard);
+            }
+            for _ in 0..tcfg.steps_per_iter {
+                t_global += 1;
+                let bi = (t_global - 1) as usize;
+                let xb = set.batch(bi, batch);
+                let per = set.t * set.d * batch;
+                let start = (bi % set.n_batches(batch)) * per;
+                let yb = Tensor::new(
+                    vec![batch, set.t, set.d],
+                    y_all.data[start..start + per].to_vec(),
+                );
+                let loss = par_step(
+                    eng, &step_art, &xb, &yb, &consts, &mut states,
+                    tcfg.lr, t_global as f32,
+                )?;
+                if trace.initial_loss.is_nan() {
+                    trace.initial_loss = loss;
+                }
+                if !tcfg.enable_dst {
+                    for s in states.values_mut() {
+                        s.v = Tensor::zeros(&s.v.shape);
+                        s.m_v = Tensor::zeros(&s.v.shape);
+                        s.u_v = Tensor::zeros(&s.v.shape);
+                    }
+                }
+                trace.losses.push(loss);
+            }
+        }
+
+        // final hard merge + stats
+        let mut qblock: BTreeMap<String, (Vec<u16>, QParams)> = BTreeMap::new();
+        for name in LINEAR_NAMES {
+            let s = &states[name];
+            let w_orig = &bw.linears[name];
+            trace.flips.insert(
+                name.to_string(),
+                (quant::count_flips(w_orig, &s.nu, &s.qp), s.nu.data.len()),
+            );
+            let codes = hard_codes(&s.wf, &s.nu, &s.qp, qmax_w);
+            let qp_eff = if tcfg.enable_dst {
+                dst_effective_scale(&s.qp, &s.v)
+            } else {
+                s.qp.clone()
+            };
+            let wq = dequant_codes(&codes, s.o, s.i, &qp_eff);
+            params.set_block_linear(l, name, &wq);
+            qblock.insert(name.to_string(), (codes, qp_eff));
+        }
+        per_block.push(trace);
+        quantized.push(qblock);
+
+        // propagate the stream through the merged quantized block
+        let bw_q = params.block(l);
+        let prop_qmax = if tcfg.propagate_act_quant { qmax_act } else { quant::A16_SENTINEL };
+        set.x = runner.forward_all(&bw_q, &set, prop_qmax)?;
+    }
+
+    Ok(CalibReport { per_block, quantized, wall_s: t0.elapsed().as_secs_f64() })
+}
+
+/// Harden phase: pool HS(nu) = |sigmoid(nu) - 0.5| across all linears of
+/// the block, saturate the `target_hard` lowest-scoring variables and
+/// reset their Adam state.
+fn harden(states: &mut BTreeMap<String, LinearState>, target_hard: usize) {
+    let total: usize = states.values().map(|s| s.nu.data.len()).sum();
+    let already: usize = states
+        .values()
+        .map(|s| s.nu.data.iter().filter(|x| x.abs() >= SAT_NU).count())
+        .sum();
+    let target = target_hard.min(total);
+    if target <= already {
+        return; // cumulative target: never un-harden
+    }
+    let need = target - already;
+    // scores of SOFT variables only, pooled across the block's linears
+    let mut scores: Vec<f32> = Vec::with_capacity(total - already);
+    for s in states.values() {
+        scores.extend(
+            s.nu
+                .data
+                .iter()
+                .filter(|x| x.abs() < SAT_NU)
+                .map(|&x| (quant::sigmoid(x) - 0.5).abs()),
+        );
+    }
+    let thr = if need >= scores.len() {
+        f32::INFINITY
+    } else {
+        let (_, nth, _) =
+            scores.select_nth_unstable_by(need - 1, |a, b| a.partial_cmp(b).unwrap());
+        *nth
+    };
+    let mut hardened = 0usize;
+    for s in states.values_mut() {
+        for idx in 0..s.nu.data.len() {
+            let x = s.nu.data[idx];
+            if x.abs() >= SAT_NU {
+                continue;
+            }
+            let score = (quant::sigmoid(x) - 0.5).abs();
+            // tie-break: stop once the quota is filled
+            if score < thr || (score == thr && hardened < need) {
+                s.nu.data[idx] = if x > 0.0 { SAT_NU } else { -SAT_NU };
+                s.m_nu.data[idx] = 0.0;
+                s.u_nu.data[idx] = 0.0;
+                hardened += 1;
+            }
+        }
+    }
+}
+
+/// Device-resident per-block constants (perf: §Perf L3 — uploading the
+/// weight grid and scales once per block instead of per step removes
+/// ~40% of the per-step host->device traffic; see benches/calib_step).
+struct BlockConstBufs {
+    norm1: xla::PjRtBuffer,
+    norm2: xla::PjRtBuffer,
+    /// (wf, s, z) per linear in LINEAR_NAMES order
+    per_linear: Vec<[xla::PjRtBuffer; 3]>,
+    qmax_w: xla::PjRtBuffer,
+    qmax_act: xla::PjRtBuffer,
+}
+
+impl BlockConstBufs {
+    fn new(
+        eng: &Engine,
+        norm1: &Tensor,
+        norm2: &Tensor,
+        states: &BTreeMap<String, LinearState>,
+        qmax_w: f32,
+        qmax_act: f32,
+    ) -> Result<Self> {
+        let per_linear = LINEAR_NAMES
+            .iter()
+            .map(|name| {
+                let s = &states[*name];
+                Ok([
+                    eng.upload(&s.wf)?,
+                    eng.upload(&s.qp.s)?,
+                    eng.upload(&s.qp.z)?,
+                ])
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(BlockConstBufs {
+            norm1: eng.upload(norm1)?,
+            norm2: eng.upload(norm2)?,
+            per_linear,
+            qmax_w: eng.upload_scalar(qmax_w)?,
+            qmax_act: eng.upload_scalar(qmax_act)?,
+        })
+    }
+}
+
+/// One soften-phase Adam step through the artifact; returns the loss and
+/// updates all host-side state in place.
+#[allow(clippy::too_many_arguments)]
+fn par_step(
+    eng: &Engine,
+    art: &crate::runtime::Artifact,
+    x: &Tensor,
+    y: &Tensor,
+    consts: &BlockConstBufs,
+    states: &mut BTreeMap<String, LinearState>,
+    lr: f32,
+    t: f32,
+) -> Result<f32> {
+    // mutable state uploads (fresh every step)
+    let xb = eng.upload(x)?;
+    let yb = eng.upload(y)?;
+    let mut var_bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(6 * LINEAR_NAMES.len());
+    for field in ["nu", "v", "m_nu", "u_nu", "m_v", "u_v"] {
+        for name in LINEAR_NAMES {
+            let s = &states[name];
+            let t = match field {
+                "nu" => &s.nu,
+                "v" => &s.v,
+                "m_nu" => &s.m_nu,
+                "u_nu" => &s.u_nu,
+                "m_v" => &s.m_v,
+                _ => &s.u_v,
+            };
+            var_bufs.push(eng.upload(t)?);
+        }
+    }
+    let lr_b = eng.upload_scalar(lr)?;
+    let t_b = eng.upload_scalar(t)?;
+
+    let mut bufs: Vec<&xla::PjRtBuffer> = vec![&xb, &yb, &consts.norm1, &consts.norm2];
+    for triple in &consts.per_linear {
+        bufs.extend([&triple[0], &triple[1], &triple[2]]);
+    }
+    bufs.extend(var_bufs.iter());
+    bufs.push(&lr_b);
+    bufs.push(&t_b);
+    bufs.push(&consts.qmax_w);
+    bufs.push(&consts.qmax_act);
+
+    let outs = eng.run_buffers(art, &bufs)?;
+    let loss = outs[0].data[0];
+    let n = LINEAR_NAMES.len();
+    for (fi, field) in ["nu", "v", "m_nu", "u_nu", "m_v", "u_v"].iter().enumerate() {
+        for (li, name) in LINEAR_NAMES.iter().enumerate() {
+            let t = outs[1 + fi * n + li].clone();
+            let s = states.get_mut(*name).unwrap();
+            match *field {
+                "nu" => s.nu = t,
+                "v" => s.v = t,
+                "m_nu" => s.m_nu = t,
+                "u_nu" => s.u_nu = t,
+                "m_v" => s.m_v = t,
+                _ => s.u_v = t,
+            }
+        }
+    }
+    Ok(loss)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harden_saturates_lowest_scores() {
+        let mut states = BTreeMap::new();
+        let w = Tensor::from_fn(&[2, 8], |i| (i as f32 - 8.0) * 0.13 + 0.01);
+        let qp = minmax_scale(&w, 8, &ClipFactors::Uniform(1.0),
+                              &ClipFactors::Uniform(1.0), 3.0);
+        states.insert("q_proj".to_string(), LinearState::init(&w, qp, false));
+        let before_hard: usize = states["q_proj"]
+            .nu
+            .data
+            .iter()
+            .filter(|x| x.abs() >= SAT_NU)
+            .count();
+        assert_eq!(before_hard, 0);
+        harden(&mut states, 10);
+        let after: usize = states["q_proj"]
+            .nu
+            .data
+            .iter()
+            .filter(|x| x.abs() >= SAT_NU)
+            .count();
+        assert!(after >= 10, "hardened {after} < 10");
+        // monotone: hardening to a smaller target is a no-op
+        harden(&mut states, 5);
+        let after2: usize = states["q_proj"]
+            .nu
+            .data
+            .iter()
+            .filter(|x| x.abs() >= SAT_NU)
+            .count();
+        assert_eq!(after, after2);
+    }
+
+    #[test]
+    fn hardened_start_is_rtn() {
+        let w = Tensor::from_fn(&[2, 8], |i| i as f32 * 0.37 - 1.0);
+        let qp = minmax_scale(&w, 8, &ClipFactors::Uniform(1.0),
+                              &ClipFactors::Uniform(1.0), 3.0);
+        let st = LinearState::init(&w, qp.clone(), true);
+        assert!(st.nu.data.iter().all(|x| x.abs() >= SAT_NU));
+        // hard codes == RTN codes
+        let hard = hard_codes(&st.wf, &st.nu, &qp, 3.0);
+        let rtn = quant::rtn_codes(&w, &qp, 3.0);
+        assert_eq!(hard, rtn);
+    }
+}

@@ -1,0 +1,96 @@
+//! Shared block-pipeline machinery: batched teacher forwards through the
+//! `block_fp_fwd` artifact and calibration-set handling.
+
+use std::rc::Rc;
+
+use anyhow::{ensure, Result};
+
+use crate::model::{BlockView, ModelConfig, Params, LINEAR_NAMES};
+use crate::runtime::{Arg, Artifact, Engine};
+use crate::tensor::Tensor;
+
+/// A calibration set: `n_seq` sequences of `t` tokens embedded to the
+/// residual stream, processed block-by-block.
+pub struct CalibSet {
+    pub n_seq: usize,
+    pub t: usize,
+    pub d: usize,
+    /// Residual-stream activations at the current block, [n_seq, t, d].
+    pub x: Tensor,
+}
+
+impl CalibSet {
+    pub fn from_tokens(params: &Params, tokens: &[i32], n_seq: usize) -> CalibSet {
+        let cfg = &params.cfg;
+        let t = cfg.max_seq;
+        ensure_eq(tokens.len(), n_seq * t);
+        CalibSet { n_seq, t, d: cfg.d_model, x: params.embed(tokens, n_seq, t) }
+    }
+
+    /// The i-th batch of size b, [b, t, d].
+    pub fn batch(&self, i: usize, b: usize) -> Tensor {
+        let per = self.t * self.d;
+        let n_batches = self.n_seq / b;
+        let idx = i % n_batches;
+        let start = idx * b * per;
+        Tensor::new(vec![b, self.t, self.d], self.x.data[start..start + b * per].to_vec())
+    }
+
+    pub fn n_batches(&self, b: usize) -> usize {
+        self.n_seq / b
+    }
+
+    pub fn write_batch(&mut self, i: usize, b: usize, y: &Tensor) {
+        let per = self.t * self.d;
+        let idx = i % (self.n_seq / b);
+        let start = idx * b * per;
+        self.x.data[start..start + b * per].copy_from_slice(&y.data);
+    }
+}
+
+fn ensure_eq(a: usize, b: usize) {
+    assert_eq!(a, b, "calibration token count mismatch");
+}
+
+/// Drives `block_fp_fwd.<size>` over a calibration set in artifact-sized
+/// batches. Used for teacher targets AND for propagating the stream
+/// through merged (already fake-quantized) blocks.
+pub struct BlockRunner<'e> {
+    pub eng: &'e Engine,
+    pub art: Rc<Artifact>,
+    pub batch: usize,
+    pub cfg: ModelConfig,
+}
+
+impl<'e> BlockRunner<'e> {
+    pub fn new(eng: &'e Engine, size: &str) -> Result<Self> {
+        let art = eng.artifact(&format!("block_fp_fwd.{size}"))?;
+        let batch = art.spec.meta.batch.unwrap_or(art.spec.meta.calib_batch);
+        let cfg = ModelConfig::from_meta(&art.spec.meta.model);
+        Ok(BlockRunner { eng, art, batch, cfg })
+    }
+
+    /// Forward the whole calibration set through one block; returns the
+    /// outputs stacked like the input, [n_seq, t, d].
+    pub fn forward_all(&self, bw: &BlockView, set: &CalibSet, qmax_act: f32) -> Result<Tensor> {
+        ensure!(set.n_seq % self.batch == 0, "n_seq {} % batch {}", set.n_seq, self.batch);
+        let mut out = Tensor::zeros(&set.x.shape);
+        let per = set.t * set.d * self.batch;
+        for i in 0..set.n_batches(self.batch) {
+            let xb = set.batch(i, self.batch);
+            let yb = self.forward_batch(bw, &xb, qmax_act)?;
+            out.data[i * per..(i + 1) * per].copy_from_slice(&yb.data);
+        }
+        Ok(out)
+    }
+
+    pub fn forward_batch(&self, bw: &BlockView, xb: &Tensor, qmax_act: f32) -> Result<Tensor> {
+        let mut args: Vec<Arg> = vec![Arg::F32(xb), Arg::F32(&bw.norm1), Arg::F32(&bw.norm2)];
+        for name in LINEAR_NAMES {
+            args.push(Arg::F32(&bw.linears[name]));
+        }
+        args.push(Arg::Scalar(qmax_act));
+        let mut outs = self.eng.run(&self.art, &args)?;
+        Ok(outs.remove(0))
+    }
+}

@@ -1,0 +1,84 @@
+//! Pretraining driver: runs the AOT `model_train_step` artifact for a few
+//! hundred Adam steps on a synthetic corpus — the E2E requirement that the
+//! whole three-layer stack composes (DESIGN.md §6). Rust owns the loop,
+//! data order, LR schedule and loss logging; the artifact owns the math.
+
+use anyhow::Result;
+
+use crate::data::Corpus;
+use crate::model::Params;
+use crate::runtime::{Arg, Engine};
+use crate::tensor::Tensor;
+
+pub struct PretrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    /// cosine decay to lr_min over the run
+    pub lr_min: f32,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for PretrainConfig {
+    fn default() -> Self {
+        PretrainConfig { steps: 300, lr: 3e-3, lr_min: 3e-4, seed: 0, log_every: 20 }
+    }
+}
+
+pub struct PretrainReport {
+    pub losses: Vec<f32>,
+    pub wall_s: f64,
+}
+
+/// Train `params` in place on the corpus; returns the loss curve.
+pub fn pretrain(
+    eng: &Engine,
+    params: &mut Params,
+    corpus: &Corpus,
+    pcfg: &PretrainConfig,
+    mut log: impl FnMut(usize, f32),
+) -> Result<PretrainReport> {
+    let t0 = std::time::Instant::now();
+    let size = params.cfg.name.clone();
+    let art = eng.artifact(&format!("model_train_step.{size}"))?;
+    let b = art.spec.meta.train_batch;
+    let t = params.cfg.max_seq;
+
+    let mut m = params.zeros_like();
+    let mut u = params.zeros_like();
+    let mut losses = Vec::with_capacity(pcfg.steps);
+
+    for step in 1..=pcfg.steps {
+        let tokens = corpus.sequences(b, t, pcfg.seed.wrapping_add(step as u64 * 131));
+        let x = step as f32 / pcfg.steps as f32;
+        let lr = pcfg.lr_min
+            + 0.5 * (pcfg.lr - pcfg.lr_min) * (1.0 + (std::f32::consts::PI * x).cos());
+
+        let p_ord = params.ordered();
+        let m_ord = m.ordered();
+        let u_ord = u.ordered();
+        let tok_shape = [b, t];
+        let mut args: Vec<Arg> = vec![Arg::I32(&tokens, &tok_shape)];
+        args.extend(p_ord.iter().map(|t| Arg::F32(t)));
+        args.extend(m_ord.iter().map(|t| Arg::F32(t)));
+        args.extend(u_ord.iter().map(|t| Arg::F32(t)));
+        args.push(Arg::Scalar(lr));
+        args.push(Arg::Scalar(step as f32));
+
+        let outs = eng.run(&art, &args)?;
+        let loss = outs[0].data[0];
+        losses.push(loss);
+        let n = crate::model::PARAM_NAMES.len();
+        let new_p: Vec<Tensor> = outs[1..1 + n].to_vec();
+        let new_m: Vec<Tensor> = outs[1 + n..1 + 2 * n].to_vec();
+        let new_u: Vec<Tensor> = outs[1 + 2 * n..1 + 3 * n].to_vec();
+        params.set_ordered(&new_p);
+        m.set_ordered(&new_m);
+        u.set_ordered(&new_u);
+
+        if step % pcfg.log_every == 0 || step == 1 {
+            log(step, loss);
+        }
+    }
+    Ok(PretrainReport { losses, wall_s: t0.elapsed().as_secs_f64() })
+}

@@ -1,0 +1,89 @@
+//! PAR harden-phase schedules (paper §3.2 + Fig. 3 ablation).
+//!
+//! A schedule maps iteration progress x = k/K to the *soft rate* — the
+//! fraction of rounding variables still soft. The paper's guidance:
+//! increase the hard percentage rapidly early, slowly later, and reach
+//! (nearly) 100% hard by the last iteration.
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    /// Paper's handcrafted decay (geometric-ish, Fig. 3 right).
+    Handcrafted,
+    /// Rule-based 1/exp(t*x) with temperature t (Fig. 3 ablation).
+    ExpTemp(f32),
+    /// Linear decay (a deliberately bad control for the ablation).
+    Linear,
+}
+
+impl Schedule {
+    /// Soft rate entering iteration k of `total` (k = 1..=total): the
+    /// fraction of variables kept soft during that iteration's soften
+    /// phase. Starts at 1.0 ("starting from an empty hard rounding set",
+    /// paper §3.2) and is 0 at k == total so the final soften phase only
+    /// polishes the DST scales before the merge.
+    pub fn soft_rate(&self, k: usize, total: usize) -> f32 {
+        assert!(k >= 1 && k <= total);
+        if k == 1 {
+            return 1.0;
+        }
+        if k == total {
+            return 0.0;
+        }
+        let x = (k - 1) as f32 / total as f32;
+        match self {
+            // fast-then-slow geometric decay: halves roughly every 12%
+            // of the run early on, creeping near zero by the end.
+            Schedule::Handcrafted => 0.5f32.powf(6.0 * x) * (1.0 - x).max(0.0),
+            Schedule::ExpTemp(t) => (-t * x).exp(),
+            Schedule::Linear => 1.0 - x,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Schedule::Handcrafted => "handcrafted".into(),
+            Schedule::ExpTemp(t) => format!("exp(t={t})"),
+            Schedule::Linear => "linear".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_decreasing_and_terminal_zero() {
+        for sched in [Schedule::Handcrafted, Schedule::ExpTemp(4.0), Schedule::Linear] {
+            let k_total = 20;
+            let mut prev = 1.0f32;
+            for k in 1..=k_total {
+                let r = sched.soft_rate(k, k_total);
+                assert!(r <= prev + 1e-6, "{sched:?} not monotone at {k}");
+                assert!((0.0..=1.0).contains(&r));
+                prev = r;
+            }
+            assert_eq!(sched.soft_rate(k_total, k_total), 0.0);
+        }
+    }
+
+    #[test]
+    fn handcrafted_decays_fast_early_slow_late() {
+        let s = Schedule::Handcrafted;
+        let early_drop = s.soft_rate(1, 20) - s.soft_rate(5, 20);
+        let late_drop = s.soft_rate(14, 20) - s.soft_rate(18, 20);
+        assert!(
+            early_drop > 4.0 * late_drop,
+            "early {early_drop} vs late {late_drop}"
+        );
+    }
+
+    #[test]
+    fn temperature_orders_rates() {
+        // higher temperature -> harder faster
+        let k = 5;
+        let r2 = Schedule::ExpTemp(2.0).soft_rate(k, 20);
+        let r5 = Schedule::ExpTemp(5.0).soft_rate(k, 20);
+        assert!(r5 < r2);
+    }
+}

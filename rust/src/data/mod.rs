@@ -1,0 +1,9 @@
+//! Synthetic data substrate (DESIGN.md §2): seeded corpora standing in
+//! for WikiText2/C4 and likelihood-ranking tasks standing in for the five
+//! zero-shot benchmarks.
+
+pub mod corpus;
+pub mod tasks;
+
+pub use corpus::{Corpus, CorpusKind};
+pub use tasks::{Task, TaskItem, TaskKind};

@@ -1,0 +1,166 @@
+//! Evaluation harness: perplexity over held-out corpus sequences and
+//! zero-shot likelihood-ranking accuracy, both driven through the
+//! `model_fwd_nll.<size>` artifact (Python never runs here).
+
+use anyhow::Result;
+use std::rc::Rc;
+
+use crate::data::{Corpus, Task};
+use crate::model::transform::identity_head_t;
+use crate::model::Params;
+use crate::runtime::{Arg, Artifact, Engine};
+use crate::tensor::Tensor;
+
+pub struct Evaluator<'e> {
+    eng: &'e Engine,
+    art: Rc<Artifact>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl<'e> Evaluator<'e> {
+    pub fn new(eng: &'e Engine, size: &str) -> Result<Self> {
+        let art = eng.artifact(&format!("model_fwd_nll.{size}"))?;
+        let batch = art.spec.meta.eval_batch;
+        let seq = art.spec.meta.model.max_seq;
+        Ok(Evaluator { eng, art, batch, seq })
+    }
+
+    /// NLL matrix [batch, seq-1] for one token batch. `head_t` carries
+    /// diag(norm_f) folding and/or the QuaRot rotation; pass None for an
+    /// untransformed model (identity x norm_f handled inside the graph is
+    /// NOT done — norm_f must be 1s when head_t is supplied).
+    pub fn nll(
+        &self,
+        params: &Params,
+        head_t: Option<&Tensor>,
+        qmax_act: f32,
+        tokens: &[i32],
+    ) -> Result<Tensor> {
+        let ident;
+        let head = match head_t {
+            Some(h) => h,
+            None => {
+                ident = identity_head_t(params.cfg.d_model);
+                &ident
+            }
+        };
+        let p_ord = params.ordered();
+        let tok_shape = [self.batch, self.seq];
+        let mut args: Vec<Arg> = vec![Arg::I32(tokens, &tok_shape)];
+        args.extend(p_ord.iter().map(|t| Arg::F32(t)));
+        args.push(Arg::F32(head));
+        args.push(Arg::Scalar(qmax_act));
+        let mut outs = self.eng.run(&self.art, &args)?;
+        Ok(outs.remove(0))
+    }
+
+    /// Token-level perplexity over `n_seq` sequences (padded up to a
+    /// multiple of the eval batch).
+    pub fn perplexity(
+        &self,
+        params: &Params,
+        head_t: Option<&Tensor>,
+        qmax_act: f32,
+        corpus: &Corpus,
+        n_seq: usize,
+        seed: u64,
+    ) -> Result<f64> {
+        let mut total = 0.0f64;
+        let mut count = 0usize;
+        let mut done = 0usize;
+        while done < n_seq {
+            let b = self.batch.min(n_seq - done);
+            let mut tokens = corpus.sequences(b, self.seq, seed.wrapping_add(done as u64));
+            // pad the batch to the artifact shape with repeats
+            while tokens.len() < self.batch * self.seq {
+                let row = tokens[..self.seq].to_vec();
+                tokens.extend(row);
+            }
+            let nll = self.nll(params, head_t, qmax_act, &tokens)?;
+            let w = self.seq - 1;
+            for r in 0..b {
+                for c in 0..w {
+                    total += nll.data[r * w + c] as f64;
+                    count += 1;
+                }
+            }
+            done += b;
+        }
+        Ok((total / count as f64).exp())
+    }
+
+    /// Zero-shot accuracy on a likelihood-ranking task: pick the candidate
+    /// continuation with the lower summed NLL after the shared prefix.
+    pub fn zeroshot(
+        &self,
+        params: &Params,
+        head_t: Option<&Tensor>,
+        qmax_act: f32,
+        task: &Task,
+    ) -> Result<f64> {
+        let pad = 0i32;
+        let mut correct = 0usize;
+        let mut idx = 0usize;
+        while idx < task.items.len() {
+            // pack up to batch/2 items (2 sequences each) per call
+            let take = (self.batch / 2).min(task.items.len() - idx);
+            let mut tokens = vec![pad; self.batch * self.seq];
+            let mut spans = Vec::new(); // (row, start, len)
+            for (slot, item) in task.items[idx..idx + take].iter().enumerate() {
+                for (ci, cand) in item.cand.iter().enumerate() {
+                    let row = slot * 2 + ci;
+                    let mut seq = item.prefix.clone();
+                    let start = seq.len();
+                    seq.extend(cand);
+                    assert!(seq.len() <= self.seq, "item longer than max_seq");
+                    tokens[row * self.seq..row * self.seq + seq.len()]
+                        .copy_from_slice(&seq);
+                    spans.push((row, start, cand.len()));
+                }
+            }
+            let nll = self.nll(params, head_t, qmax_act, &tokens)?;
+            let w = self.seq - 1;
+            for (slot, item) in task.items[idx..idx + take].iter().enumerate() {
+                let mut scores = [0.0f64; 2];
+                for ci in 0..2 {
+                    let (row, start, len) = spans[slot * 2 + ci];
+                    // nll[r, p] is the NLL of predicting token p+1; the
+                    // candidate occupies positions start..start+len, so we
+                    // sum nll at p = start-1 .. start+len-2.
+                    for p in (start - 1)..(start + len - 1) {
+                        scores[ci] += nll.data[row * w + p] as f64;
+                    }
+                }
+                let pick = if scores[0] <= scores[1] { 0 } else { 1 };
+                if pick == item.label {
+                    correct += 1;
+                }
+            }
+            idx += take;
+        }
+        Ok(correct as f64 / task.items.len() as f64)
+    }
+
+    /// Average accuracy over the five synthetic tasks (the tables' "Avg").
+    pub fn zeroshot_suite(
+        &self,
+        params: &Params,
+        head_t: Option<&Tensor>,
+        qmax_act: f32,
+        corpus: &Corpus,
+        n_items: usize,
+        prefix_len: usize,
+    ) -> Result<Vec<(String, f64)>> {
+        let mut out = Vec::new();
+        let mut sum = 0.0;
+        for kind in crate::data::tasks::ALL_TASKS {
+            let task = Task::generate(kind, corpus, n_items, prefix_len);
+            let acc = self.zeroshot(params, head_t, qmax_act, &task)?;
+            sum += acc;
+            out.push((kind.name().to_string(), acc));
+        }
+        out.push(("Avg".to_string(), sum / 5.0));
+        Ok(out)
+    }
+}

@@ -1,0 +1,239 @@
+//! PTQ method dispatch: quantize a pretrained model with any of the
+//! paper's methods/compositions and return the quantized params plus
+//! whatever the evaluator needs (head_t for rotated models, the
+//! calibration report for serving/stats).
+
+use anyhow::Result;
+
+use crate::baselines::awq::{awq_transform, quantize_with_clips};
+use crate::baselines::gptq::gptq_linear;
+use crate::coordinator::lwc::{calibrate_lwc, LwcConfig};
+use crate::coordinator::par::{calibrate_tesseraq, CalibReport, TesseraqConfig};
+use crate::coordinator::Schedule;
+use crate::data::Corpus;
+use crate::model::hostfwd::{block_fwd, tap_for_linear, BlockFwdOpts};
+use crate::model::Params;
+use crate::quant::rotate::rotate_model;
+use crate::quant::smooth::smoothquant;
+use crate::quant::{minmax_scale, rtn_qdq, ClipFactors, QuantConfig};
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Fp16,
+    Rtn,
+    Gptq,
+    Awq,
+    /// OmniQuant-style learnable weight clipping.
+    OmniQuant,
+    /// TesseraQ initialized from AWQ (the paper's default, "TesseraQ*").
+    TesseraQ,
+    /// TesseraQ initialized from OmniQuant clips ("TesseraQ†", W2A16).
+    TesseraQLwc,
+    /// GPTQ applied on an AWQ checkpoint (Fig. 2's failed composition).
+    GptqOnAwq,
+    SmoothQuant,
+    /// QuaRot rotation + RTN.
+    QuaRot,
+    /// QuaRot + GPTQ ("GPTQ†").
+    QuaRotGptq,
+    /// QuaRot + TesseraQ ("TesseraQ†", W-A tables).
+    QuaRotTesseraQ,
+}
+
+impl Method {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Fp16 => "FP16",
+            Method::Rtn => "RTN",
+            Method::Gptq => "GPTQ",
+            Method::Awq => "AWQ",
+            Method::OmniQuant => "OmniQuant",
+            Method::TesseraQ => "TesseraQ*",
+            Method::TesseraQLwc => "TesseraQ+",
+            Method::GptqOnAwq => "GPTQ-on-AWQ",
+            Method::SmoothQuant => "SmoothQuant",
+            Method::QuaRot => "QuaRot",
+            Method::QuaRotGptq => "GPTQ(rot)",
+            Method::QuaRotTesseraQ => "TesseraQ(rot)",
+        }
+    }
+}
+
+pub struct Quantized {
+    pub params: Params,
+    /// head matrix for model_fwd_nll (None = identity/norm_f in place)
+    pub head_t: Option<Tensor>,
+    pub report: Option<CalibReport>,
+}
+
+pub struct MethodOpts {
+    pub n_seq: usize,
+    pub seed: u64,
+    pub tesseraq: TesseraqConfig,
+    pub lwc: LwcConfig,
+    pub schedule: Schedule,
+}
+
+impl MethodOpts {
+    pub fn new(qcfg: QuantConfig, n_seq: usize, fast: bool) -> MethodOpts {
+        let mut t = if fast {
+            TesseraqConfig::fast(qcfg)
+        } else {
+            TesseraqConfig::standard(qcfg)
+        };
+        t.propagate_act_quant = qcfg.act_bits.is_some();
+        let mut l = if fast { LwcConfig::fast(qcfg) } else { LwcConfig::standard(qcfg) };
+        l.propagate_act_quant = qcfg.act_bits.is_some();
+        MethodOpts { n_seq, seed: 0xCA11B, tesseraq: t, lwc: l, schedule: Schedule::Handcrafted }
+    }
+}
+
+/// RTN over every linear (host).
+pub fn rtn_model(params: &mut Params, qcfg: &QuantConfig) {
+    let qmax = qcfg.qmax_w();
+    for l in 0..params.cfg.n_layers {
+        let bw = params.block(l);
+        for (name, w) in &bw.linears {
+            let g = qcfg.scheme.group_size(w.shape[1]);
+            let qp = minmax_scale(w, g, &ClipFactors::Uniform(1.0), &ClipFactors::Uniform(1.0), qmax);
+            params.set_block_linear(l, name, &rtn_qdq(w, &qp, qmax));
+        }
+    }
+}
+
+/// GPTQ block-by-block with quantized-prefix propagation (host).
+pub fn gptq_model(params: &mut Params, tokens: &[i32], n_seq: usize, qcfg: &QuantConfig) {
+    let cfg = params.cfg.clone();
+    let mut x = params.embed(tokens, n_seq, cfg.max_seq);
+    let act_qmax =
+        if qcfg.act_bits.is_some() { Some(qcfg.qmax_act()) } else { None };
+    for l in 0..cfg.n_layers {
+        let opts = BlockFwdOpts { act_qmax, collect: true };
+        let (_, taps) = block_fwd(&x, &params.block(l), &cfg, &opts);
+        for (name, _) in cfg.linear_shapes() {
+            let w = params.get(name).index0(l);
+            let tap = &taps[tap_for_linear(name)];
+            let out = gptq_linear(&w, tap, qcfg, 0.01);
+            params.set_block_linear(l, name, &out.wq);
+        }
+        let opts2 = BlockFwdOpts { act_qmax, collect: false };
+        x = block_fwd(&x, &params.block(l), &cfg, &opts2).0;
+    }
+}
+
+/// Quantize `base` (FP checkpoint) with `method`.
+pub fn quantize(
+    eng: &Engine,
+    base: &Params,
+    method: Method,
+    qcfg: &QuantConfig,
+    corpus: &Corpus,
+    opts: &MethodOpts,
+) -> Result<Quantized> {
+    let cfg = base.cfg.clone();
+    let tokens = corpus.sequences(opts.n_seq, cfg.max_seq, opts.seed);
+    let calib_x = || base.embed(&tokens, opts.n_seq, cfg.max_seq);
+    let mut params = base.clone();
+    let mut head_t = None;
+    let mut report = None;
+
+    match method {
+        Method::Fp16 => {}
+        Method::Rtn => rtn_model(&mut params, qcfg),
+        Method::Gptq => gptq_model(&mut params, &tokens, opts.n_seq, qcfg),
+        Method::Awq => {
+            let res = awq_transform(&mut params, &calib_x(), qcfg, 16, 6);
+            quantize_with_clips(&mut params, &res.clips, qcfg);
+        }
+        Method::OmniQuant => {
+            calibrate_lwc(eng, &mut params, &tokens, opts.n_seq, &opts.lwc)?;
+        }
+        Method::TesseraQ => {
+            let res = awq_transform(&mut params, &calib_x(), qcfg, 16, 6);
+            let mut tcfg = opts.tesseraq.clone();
+            tcfg.schedule = opts.schedule;
+            report = Some(calibrate_tesseraq(
+                eng, &mut params, Some(&res.clips), &tokens, opts.n_seq, &tcfg,
+            )?);
+        }
+        Method::TesseraQLwc => {
+            // learn clips on a clone (OmniQuant init), then PAR on the
+            // original weights with those clips — the paper's W2A16 recipe
+            let mut probe = params.clone();
+            let lrep = calibrate_lwc(eng, &mut probe, &tokens, opts.n_seq, &opts.lwc)?;
+            let mut tcfg = opts.tesseraq.clone();
+            tcfg.schedule = opts.schedule;
+            report = Some(calibrate_tesseraq(
+                eng, &mut params, Some(&lrep.clips), &tokens, opts.n_seq, &tcfg,
+            )?);
+        }
+        Method::GptqOnAwq => {
+            awq_transform(&mut params, &calib_x(), qcfg, 16, 6);
+            gptq_model(&mut params, &tokens, opts.n_seq, qcfg);
+        }
+        Method::SmoothQuant => {
+            smoothquant(&mut params, &calib_x(), 0.5);
+            rtn_model(&mut params, qcfg);
+        }
+        Method::QuaRot => {
+            head_t = Some(rotate_model(&mut params, R0_SEED));
+            rtn_model(&mut params, qcfg);
+        }
+        Method::QuaRotGptq => {
+            head_t = Some(rotate_model(&mut params, R0_SEED));
+            // tokens embed must use the ROTATED embedding
+            let rtokens = tokens.clone();
+            gptq_model(&mut params, &rtokens, opts.n_seq, qcfg);
+        }
+        Method::QuaRotTesseraQ => {
+            head_t = Some(rotate_model(&mut params, R0_SEED));
+            let mut tcfg = opts.tesseraq.clone();
+            tcfg.schedule = opts.schedule;
+            report = Some(calibrate_tesseraq(
+                eng, &mut params, None, &tokens, opts.n_seq, &tcfg,
+            )?);
+        }
+    }
+    Ok(Quantized { params, head_t, report })
+}
+
+/// qmax_act to use at evaluation time for a quant config.
+pub fn eval_qmax_act(qcfg: &QuantConfig) -> f32 {
+    qcfg.qmax_act()
+}
+
+
+#[allow(non_upper_case_globals)]
+const R0_SEED: u64 = 0x1207;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::GroupScheme;
+
+    #[test]
+    fn labels_unique() {
+        let all = [
+            Method::Fp16, Method::Rtn, Method::Gptq, Method::Awq,
+            Method::OmniQuant, Method::TesseraQ, Method::TesseraQLwc,
+            Method::GptqOnAwq, Method::SmoothQuant, Method::QuaRot,
+            Method::QuaRotGptq, Method::QuaRotTesseraQ,
+        ];
+        let mut labels: Vec<_> = all.iter().map(|m| m.label()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), all.len());
+    }
+
+    #[test]
+    fn method_opts_propagate_act_quant() {
+        let qcfg = QuantConfig::new(4, GroupScheme::PerChannel, Some(4));
+        let o = MethodOpts::new(qcfg, 16, true);
+        assert!(o.tesseraq.propagate_act_quant);
+        assert!(o.lwc.propagate_act_quant);
+        let q2 = QuantConfig::weight_only(2, GroupScheme::Group(64));
+        assert!(!MethodOpts::new(q2, 16, true).tesseraq.propagate_act_quant);
+    }
+}

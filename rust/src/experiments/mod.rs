@@ -1,0 +1,103 @@
+//! Experiment drivers: one function per paper table/figure (DESIGN.md §5).
+//!
+//! Each driver assembles the full pipeline — pretrained checkpoint,
+//! baseline/TesseraQ quantization, evaluation — and prints/persists a
+//! paper-shaped Markdown table under results/. `fast` shrinks calibration
+//! budgets and method sets for CI-speed runs; the full configuration is
+//! what EXPERIMENTS.md records.
+
+pub mod methods;
+pub mod tables;
+
+use anyhow::Result;
+
+use crate::coordinator::pretrain::{pretrain, PretrainConfig};
+use crate::data::{Corpus, CorpusKind};
+use crate::model::{ModelConfig, Params};
+use crate::report::results_dir;
+use crate::runtime::Engine;
+use crate::tensor::Pcg32;
+
+pub struct Ctx {
+    pub eng: Engine,
+    pub fast: bool,
+}
+
+impl Ctx {
+    pub fn new(fast: bool) -> Result<Ctx> {
+        Ok(Ctx { eng: Engine::from_default_dir()?, fast })
+    }
+
+    /// Pretraining steps per model size (fast mode trains less).
+    fn steps_for(&self, size: &str) -> usize {
+        let base = match size {
+            "nano" => 120,
+            "tiny" | "tiny-gqa" => 300,
+            _ => 240,
+        };
+        if self.fast {
+            base / 4
+        } else {
+            base
+        }
+    }
+
+    /// Load or pretrain a checkpoint for (size, corpus); cached on disk so
+    /// every table shares the same base model.
+    pub fn base_model(&self, size: &str, kind: CorpusKind) -> Result<Params> {
+        let dir = results_dir().join("ckpt");
+        let tag = if self.fast { "fast" } else { "full" };
+        let path = dir.join(format!("{size}.{}.{tag}.tsq", kind.name()));
+        if path.exists() {
+            if let Ok(p) = Params::load(&path) {
+                return Ok(p);
+            }
+        }
+        let cfg = ModelConfig::preset(size)?;
+        let corpus = Corpus::new(kind, cfg.vocab_size);
+        let mut rng = Pcg32::seeded(42);
+        let mut params = Params::init(&cfg, &mut rng);
+        let pcfg = PretrainConfig {
+            steps: self.steps_for(size),
+            ..PretrainConfig::default()
+        };
+        eprintln!("[pretrain] {size} on {} for {} steps...", kind.name(), pcfg.steps);
+        pretrain(&self.eng, &mut params, &corpus, &pcfg, |s, l| {
+            eprintln!("  step {s:>4}  loss {l:.4}");
+        })?;
+        params.save(&path)?;
+        Ok(params)
+    }
+
+    pub fn corpus(&self, kind: CorpusKind, size: &str) -> Result<Corpus> {
+        let cfg = ModelConfig::preset(size)?;
+        Ok(Corpus::new(kind, cfg.vocab_size))
+    }
+
+    /// Calibration sequence count (paper: 512 x 2048 tokens; scaled).
+    pub fn n_calib(&self) -> usize {
+        if self.fast {
+            16
+        } else {
+            32
+        }
+    }
+
+    /// Held-out evaluation sequences.
+    pub fn n_eval(&self) -> usize {
+        if self.fast {
+            24
+        } else {
+            64
+        }
+    }
+
+    /// Zero-shot items per task.
+    pub fn n_items(&self) -> usize {
+        if self.fast {
+            60
+        } else {
+            200
+        }
+    }
+}

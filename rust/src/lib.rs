@@ -1,0 +1,43 @@
+//! TesseraQ reproduction — L3 coordinator library.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! - L1: Pallas kernels (python/compile/kernels, build-time only)
+//! - L2: JAX graphs lowered to HLO text artifacts (python/compile)
+//! - L3: this crate — loads `artifacts/*.hlo.txt` on the PJRT CPU client
+//!   and runs the paper's calibration pipeline, baselines, evaluation
+//!   harness and quantized serving path. Python never runs at runtime.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod util;
+
+pub use runtime::Engine;
+pub use tensor::Tensor;
+
+/// Default artifact directory relative to the repo root.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    // Allow override for tests / deployments.
+    if let Ok(d) = std::env::var("TESSERAQ_ARTIFACTS") {
+        return d.into();
+    }
+    // Walk up from cwd until we find artifacts/manifest.json.
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

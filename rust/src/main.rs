@@ -1,0 +1,313 @@
+//! `repro` — launcher CLI for the TesseraQ reproduction.
+//!
+//! Subcommands (hand-rolled parser: the offline vendor set has no clap):
+//!   repro pretrain  --size tiny --steps 300 [--corpus wiki] [--out PATH]
+//!   repro calibrate --size tiny --quant W2A16g128 [--method tesseraq]
+//!   repro eval      --size tiny [--ckpt PATH] [--quant ...]
+//!   repro serve     --size tiny --bits 4 [--batch 16] [--new 64]
+//!   repro table N   [--fast]       regenerate paper table N
+//!   repro figure N  [--fast]       regenerate paper figure N
+//!   repro e2e       [--fast]       full train->quantize->eval->serve run
+//!   repro all-tables [--fast]      every table + figure
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use tesseraq::coordinator::pretrain::{pretrain, PretrainConfig};
+use tesseraq::data::CorpusKind;
+use tesseraq::eval::Evaluator;
+use tesseraq::experiments::methods::{quantize, Method, MethodOpts};
+use tesseraq::experiments::{tables, Ctx};
+use tesseraq::model::{ModelConfig, Params};
+use tesseraq::quant::{GroupScheme, QuantConfig};
+use tesseraq::report::results_dir;
+use tesseraq::serve::ServeModel;
+use tesseraq::tensor::Pcg32;
+use tesseraq::Engine;
+
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+fn parse_args() -> Args {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut it = std::env::args().skip(1).peekable();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            let val = if it.peek().map(|v| !v.starts_with("--")).unwrap_or(false) {
+                it.next().unwrap()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(name.to_string(), val);
+        } else {
+            positional.push(a);
+        }
+    }
+    Args { positional, flags }
+}
+
+impl Args {
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn fast(&self) -> bool {
+        self.flag("fast").is_some()
+    }
+
+    fn size(&self) -> String {
+        self.flag("size").unwrap_or("tiny").to_string()
+    }
+
+    fn corpus_kind(&self) -> CorpusKind {
+        match self.flag("corpus").unwrap_or("wiki") {
+            "c4" => CorpusKind::C4Like,
+            _ => CorpusKind::WikiLike,
+        }
+    }
+}
+
+/// Parse paper notation "W2A16g128" into a QuantConfig.
+fn parse_quant(s: &str) -> Result<QuantConfig> {
+    let s = s.to_uppercase();
+    let rest = s.strip_prefix('W').context("quant config must start with W")?;
+    let apos = rest.find('A').context("quant config needs A<bits>")?;
+    let w_bits: u32 = rest[..apos].parse()?;
+    let rest = &rest[apos + 1..];
+    let (a_str, g_str) = match rest.find('G') {
+        Some(g) => (&rest[..g], Some(&rest[g + 1..])),
+        None => (rest, None),
+    };
+    let a_bits: u32 = a_str.parse()?;
+    let scheme = match g_str {
+        Some(g) => GroupScheme::Group(g.parse()?),
+        None => GroupScheme::PerChannel,
+    };
+    Ok(QuantConfig::new(w_bits, scheme, if a_bits >= 16 { None } else { Some(a_bits) }))
+}
+
+fn parse_method(s: &str) -> Result<Method> {
+    Ok(match s.to_lowercase().as_str() {
+        "rtn" => Method::Rtn,
+        "gptq" => Method::Gptq,
+        "awq" => Method::Awq,
+        "omniquant" | "lwc" => Method::OmniQuant,
+        "tesseraq" => Method::TesseraQ,
+        "tesseraq-lwc" => Method::TesseraQLwc,
+        "smoothquant" => Method::SmoothQuant,
+        "quarot" => Method::QuaRot,
+        "quarot-gptq" => Method::QuaRotGptq,
+        "quarot-tesseraq" => Method::QuaRotTesseraQ,
+        other => bail!("unknown method {other:?}"),
+    })
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "pretrain" => cmd_pretrain(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "table" => {
+            let id: u32 = args.positional.get(1).context("table N")?.parse()?;
+            let ctx = Ctx::new(args.fast())?;
+            tables::run_table(&ctx, id)
+        }
+        "figure" => {
+            let id: u32 = args.positional.get(1).context("figure N")?.parse()?;
+            let ctx = Ctx::new(args.fast())?;
+            tables::run_figure(&ctx, id)
+        }
+        "all-tables" => {
+            let ctx = Ctx::new(args.fast())?;
+            for id in [1, 2, 3, 4, 5, 6, 7, 8, 10, 11] {
+                println!("==== table {id} ====");
+                tables::run_table(&ctx, id)?;
+            }
+            for id in [2, 3, 4] {
+                println!("==== figure {id} ====");
+                tables::run_figure(&ctx, id)?;
+            }
+            Ok(())
+        }
+        "e2e" => cmd_e2e(&args),
+        _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "repro — TesseraQ reproduction launcher
+  pretrain  --size S --steps N [--corpus wiki|c4] [--out PATH]
+  calibrate --size S --quant W2A16g128 [--method tesseraq] [--ckpt PATH]
+  eval      --size S [--ckpt PATH] [--corpus wiki|c4]
+  serve     --size S --bits 2|3|4 [--batch B] [--new N]
+  table N   [--fast]        regenerate paper table N (1-12)
+  figure N  [--fast]        regenerate paper figure N (2-4)
+  all-tables [--fast]
+  e2e       [--fast]        full train -> quantize -> eval -> serve";
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let eng = Engine::from_default_dir()?;
+    let size = args.size();
+    let cfg = ModelConfig::preset(&size)?;
+    let kind = args.corpus_kind();
+    let corpus = tesseraq::data::Corpus::new(kind, cfg.vocab_size);
+    let steps: usize = args.flag("steps").unwrap_or("300").parse()?;
+    let mut rng = Pcg32::seeded(42);
+    let mut params = Params::init(&cfg, &mut rng);
+    let pcfg = PretrainConfig { steps, ..Default::default() };
+    println!(
+        "pretraining {size} ({:.2}M params) on {} for {steps} steps",
+        cfg.param_count() as f64 / 1e6,
+        kind.name()
+    );
+    let rep = pretrain(&eng, &mut params, &corpus, &pcfg, |s, l| {
+        println!("  step {s:>5}  loss {l:.4}");
+    })?;
+    let out = args
+        .flag("out")
+        .map(Into::into)
+        .unwrap_or_else(|| results_dir().join("ckpt").join(format!("{size}.{}.cli.tsq", kind.name())));
+    params.save(&out)?;
+    println!(
+        "done in {:.1}s (final loss {:.4}); saved {}",
+        rep.wall_s,
+        rep.losses.last().unwrap(),
+        out.display()
+    );
+    Ok(())
+}
+
+fn load_or_train(args: &Args, ctx: &Ctx, size: &str) -> Result<Params> {
+    if let Some(p) = args.flag("ckpt") {
+        return Params::load(std::path::Path::new(p));
+    }
+    ctx.base_model(size, args.corpus_kind())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let ctx = Ctx::new(args.fast())?;
+    let size = args.size();
+    let qcfg = parse_quant(args.flag("quant").unwrap_or("W2A16g128"))?;
+    let method = parse_method(args.flag("method").unwrap_or("tesseraq"))?;
+    let base = load_or_train(args, &ctx, &size)?;
+    let calib = ctx.corpus(args.corpus_kind(), &size)?;
+    let opts = MethodOpts::new(qcfg, ctx.n_calib(), ctx.fast);
+    println!("calibrating {size} with {} at {}", method.label(), qcfg.label());
+    let t0 = std::time::Instant::now();
+    let q = quantize(&ctx.eng, &base, method, &qcfg, &calib, &opts)?;
+    println!("calibration done in {:.1}s", t0.elapsed().as_secs_f64());
+    let ev = Evaluator::new(&ctx.eng, &size)?;
+    let wiki = ctx.corpus(CorpusKind::WikiLike, &size)?;
+    let ppl = ev.perplexity(&q.params, q.head_t.as_ref(), qcfg.qmax_act(), &wiki,
+                            ctx.n_eval(), 0xEA1)?;
+    println!("wiki-like PPL: {ppl:.3}");
+    let out = args
+        .flag("out")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| {
+            results_dir().join("ckpt").join(format!("{size}.{}.{}.tsq", method.label(), qcfg.label()))
+        });
+    q.params.save(&out)?;
+    println!("saved {}", out.display());
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let ctx = Ctx::new(args.fast())?;
+    let size = args.size();
+    let params = load_or_train(args, &ctx, &size)?;
+    let ev = Evaluator::new(&ctx.eng, &size)?;
+    for kind in [CorpusKind::WikiLike, CorpusKind::C4Like] {
+        let corpus = ctx.corpus(kind, &size)?;
+        let ppl = ev.perplexity(&params, None, 65535.0, &corpus, ctx.n_eval(), 0xEA1)?;
+        println!("{} PPL: {ppl:.3}", kind.name());
+    }
+    let wiki = ctx.corpus(CorpusKind::WikiLike, &size)?;
+    for (name, acc) in ev.zeroshot_suite(&params, None, 65535.0, &wiki, ctx.n_items(), 24)? {
+        println!("{name:>10}: {:.2}%", acc * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let ctx = Ctx::new(args.fast())?;
+    let size = args.size();
+    let base = load_or_train(args, &ctx, &size)?;
+    let calib = ctx.corpus(CorpusKind::WikiLike, &size)?;
+    let batch: usize = args.flag("batch").unwrap_or("4").parse()?;
+    let max_new: usize = args.flag("new").unwrap_or("64").parse()?;
+    let bits: u32 = args.flag("bits").unwrap_or("4").parse()?;
+    let model = if bits >= 16 {
+        ServeModel::dense(&base)
+    } else {
+        let qcfg = QuantConfig::weight_only(bits, GroupScheme::Group(128));
+        let opts = MethodOpts::new(qcfg, ctx.n_calib(), ctx.fast);
+        let q = quantize(&ctx.eng, &base, Method::TesseraQ, &qcfg, &calib, &opts)?;
+        ServeModel::packed(&q.params, q.report.as_ref().unwrap(), bits)
+    };
+    let prompts: Vec<Vec<i32>> = (0..batch).map(|i| calib.sample(16, i as u64)).collect();
+    let (outs, stats) = model.generate(&prompts, max_new)?;
+    println!(
+        "{}: batch={} weight_mem={} throughput={:.1} tok/s",
+        stats.label,
+        stats.batch,
+        tesseraq::report::fmt_bytes(stats.weight_bytes),
+        stats.tokens_per_s
+    );
+    println!("sample continuation: {:?}", &outs[0][..outs[0].len().min(16)]);
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> Result<()> {
+    // the full story: train -> FP eval -> RTN/AWQ/TesseraQ -> eval -> serve
+    let ctx = Ctx::new(args.fast())?;
+    let size = args.size();
+    println!("== E2E: {size} ==");
+    let base = ctx.base_model(&size, CorpusKind::WikiLike)?;
+    let calib = ctx.corpus(CorpusKind::WikiLike, &size)?;
+    let ev = Evaluator::new(&ctx.eng, &size)?;
+    let wiki = ctx.corpus(CorpusKind::WikiLike, &size)?;
+    let qcfg = QuantConfig::weight_only(2, GroupScheme::Group(64));
+
+    let ppl_fp = ev.perplexity(&base, None, 65535.0, &wiki, ctx.n_eval(), 0xEA1)?;
+    println!("FP16 wiki-like PPL: {ppl_fp:.3}");
+
+    let mut lines = vec![format!("| FP16 | {ppl_fp:.3} | - |")];
+    for m in [Method::Rtn, Method::Awq, Method::TesseraQ] {
+        let opts = MethodOpts::new(qcfg, ctx.n_calib(), ctx.fast);
+        let t0 = std::time::Instant::now();
+        let q = quantize(&ctx.eng, &base, m, &qcfg, &calib, &opts)?;
+        let ppl = ev.perplexity(&q.params, q.head_t.as_ref(), qcfg.qmax_act(), &wiki,
+                                ctx.n_eval(), 0xEA1)?;
+        println!("{} {} PPL: {ppl:.3} ({:.1}s)", m.label(), qcfg.label(),
+                 t0.elapsed().as_secs_f64());
+        lines.push(format!("| {} | {ppl:.3} | {:.1}s |", m.label(),
+                           t0.elapsed().as_secs_f64()));
+        if m == Method::TesseraQ {
+            let packed = ServeModel::packed(&q.params, q.report.as_ref().unwrap(), qcfg.w_bits);
+            let prompts: Vec<Vec<i32>> = (0..4).map(|i| calib.sample(16, i as u64)).collect();
+            let (_, stats) = packed.generate(&prompts, 32)?;
+            println!(
+                "packed W{} serve: {} weight mem, {:.1} tok/s",
+                qcfg.w_bits,
+                tesseraq::report::fmt_bytes(stats.weight_bytes),
+                stats.tokens_per_s
+            );
+        }
+    }
+    tesseraq::report::append_log(
+        "e2e.md",
+        &format!("## e2e {size} {}\n| method | PPL | time |\n|---|---|---|\n{}\n",
+                 qcfg.label(), lines.join("\n")),
+    )?;
+    Ok(())
+}

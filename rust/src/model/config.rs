@@ -1,0 +1,121 @@
+//! Model configuration (mirror of python/compile/configs.py — the named
+//! presets must stay in sync; the manifest is the authoritative source
+//! when an Engine is available).
+
+use anyhow::{bail, Result};
+
+use crate::runtime::ModelMeta;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub max_seq: usize,
+    pub rope_theta: f32,
+    pub norm_eps: f32,
+}
+
+impl ModelConfig {
+    pub fn preset(name: &str) -> Result<ModelConfig> {
+        let (v, d, h, kv, f, l, t) = match name {
+            "nano" => (128, 64, 2, 2, 192, 2, 64),
+            "tiny" => (256, 256, 4, 4, 768, 6, 128),
+            "tiny-gqa" => (256, 256, 4, 2, 896, 6, 128),
+            "small" => (512, 384, 6, 6, 1152, 8, 128),
+            _ => bail!("unknown model preset {name:?}"),
+        };
+        Ok(ModelConfig {
+            name: name.to_string(),
+            vocab_size: v,
+            d_model: d,
+            n_heads: h,
+            n_kv_heads: kv,
+            d_ff: f,
+            n_layers: l,
+            max_seq: t,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        })
+    }
+
+    pub fn from_meta(m: &ModelMeta) -> ModelConfig {
+        ModelConfig {
+            name: m.name.clone(),
+            vocab_size: m.vocab_size,
+            d_model: m.d_model,
+            n_heads: m.n_heads,
+            n_kv_heads: m.n_kv_heads,
+            d_ff: m.d_ff,
+            n_layers: m.n_layers,
+            max_seq: m.max_seq,
+            rope_theta: m.rope_theta as f32,
+            norm_eps: m.norm_eps as f32,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn d_kv(&self) -> usize {
+        self.n_kv_heads * self.head_dim()
+    }
+
+    /// (out, in) of every quantizable linear in one block, in the paper's
+    /// Table 7 order.
+    pub fn linear_shapes(&self) -> Vec<(&'static str, (usize, usize))> {
+        let (d, dkv, f) = (self.d_model, self.d_kv(), self.d_ff);
+        vec![
+            ("q_proj", (d, d)),
+            ("k_proj", (dkv, d)),
+            ("v_proj", (dkv, d)),
+            ("o_proj", (d, d)),
+            ("gate_proj", (f, d)),
+            ("up_proj", (f, d)),
+            ("down_proj", (d, f)),
+        ]
+    }
+
+    pub fn linear_shape(&self, name: &str) -> (usize, usize) {
+        self.linear_shapes()
+            .into_iter()
+            .find(|(n, _)| *n == name)
+            .unwrap_or_else(|| panic!("unknown linear {name}"))
+            .1
+    }
+
+    pub fn param_count(&self) -> usize {
+        let per_block: usize =
+            self.linear_shapes().iter().map(|(_, (o, i))| o * i).sum::<usize>()
+                + 2 * self.d_model;
+        self.vocab_size * self.d_model + self.d_model + self.n_layers * per_block
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_parse_and_divide() {
+        for name in ["nano", "tiny", "tiny-gqa", "small"] {
+            let c = ModelConfig::preset(name).unwrap();
+            assert_eq!(c.d_model % c.n_heads, 0);
+            assert_eq!(c.n_heads % c.n_kv_heads, 0);
+            assert!(c.param_count() > 0);
+        }
+        assert!(ModelConfig::preset("huge").is_err());
+    }
+
+    #[test]
+    fn o_proj_is_square() {
+        let c = ModelConfig::preset("tiny-gqa").unwrap();
+        assert_eq!(c.linear_shape("o_proj"), (256, 256));
+        assert_eq!(c.linear_shape("k_proj"), (128, 256));
+    }
+}

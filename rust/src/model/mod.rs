@@ -1,0 +1,11 @@
+//! Model definition mirror: configs, parameter store, checkpoint I/O and
+//! a host-side (pure Rust) forward used by GPTQ input collection and the
+//! packed-weight serving path.
+
+pub mod config;
+pub mod hostfwd;
+pub mod params;
+pub mod transform;
+
+pub use config::ModelConfig;
+pub use params::{BlockView, Params, LINEAR_NAMES, PARAM_NAMES};

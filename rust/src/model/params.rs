@@ -1,0 +1,274 @@
+//! Parameter store: stacked per-name tensors matching the artifact input
+//! contract (python/compile/model.py PARAM_NAMES), plus binary checkpoint
+//! I/O (own format — offline environment, no external serialization).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::ModelConfig;
+use crate::tensor::{Pcg32, Tensor};
+
+pub const LINEAR_NAMES: [&str; 7] = [
+    "q_proj", "k_proj", "v_proj", "o_proj", "gate_proj", "up_proj", "down_proj",
+];
+
+/// Artifact positional order: emb, norm_f, linears..., norm1, norm2.
+pub const PARAM_NAMES: [&str; 11] = [
+    "emb", "norm_f", "q_proj", "k_proj", "v_proj", "o_proj", "gate_proj",
+    "up_proj", "down_proj", "norm1", "norm2",
+];
+
+#[derive(Clone, Debug)]
+pub struct Params {
+    pub cfg: ModelConfig,
+    map: BTreeMap<String, Tensor>,
+}
+
+/// Per-block weight view (owned copies of one layer's slices).
+#[derive(Clone, Debug)]
+pub struct BlockView {
+    pub layer: usize,
+    pub linears: BTreeMap<String, Tensor>,
+    pub norm1: Tensor,
+    pub norm2: Tensor,
+}
+
+impl Params {
+    pub fn shape_of(cfg: &ModelConfig, name: &str) -> Vec<usize> {
+        match name {
+            "emb" => vec![cfg.vocab_size, cfg.d_model],
+            "norm_f" => vec![cfg.d_model],
+            "norm1" | "norm2" => vec![cfg.n_layers, cfg.d_model],
+            _ => {
+                let (o, i) = cfg.linear_shape(name);
+                vec![cfg.n_layers, o, i]
+            }
+        }
+    }
+
+    /// Random init matching python/tests conventions: norms = 1, weights
+    /// N(0, (0.4/sqrt(fan_in))^2).
+    pub fn init(cfg: &ModelConfig, rng: &mut Pcg32) -> Params {
+        let mut map = BTreeMap::new();
+        for name in PARAM_NAMES {
+            let shape = Self::shape_of(cfg, name);
+            let t = if name.contains("norm") {
+                Tensor::full(&shape, 1.0)
+            } else {
+                let fan_in = *shape.last().unwrap() as f32;
+                Tensor::randn(&shape, 0.4 / fan_in.sqrt(), rng)
+            };
+            map.insert(name.to_string(), t);
+        }
+        Params { cfg: cfg.clone(), map }
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        self.map.get(name).unwrap_or_else(|| panic!("no param {name}"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> &mut Tensor {
+        self.map.get_mut(name).unwrap_or_else(|| panic!("no param {name}"))
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) {
+        let expect = Self::shape_of(&self.cfg, name);
+        assert_eq!(t.shape, expect, "param {name}");
+        self.map.insert(name.to_string(), t);
+    }
+
+    /// Tensors in artifact positional order.
+    pub fn ordered(&self) -> Vec<&Tensor> {
+        PARAM_NAMES.iter().map(|n| self.get(n)).collect()
+    }
+
+    /// Replace all tensors from artifact-ordered outputs.
+    pub fn set_ordered(&mut self, tensors: &[Tensor]) {
+        assert_eq!(tensors.len(), PARAM_NAMES.len());
+        for (name, t) in PARAM_NAMES.iter().zip(tensors) {
+            self.set(name, t.clone());
+        }
+    }
+
+    /// Zero-initialized clone (Adam state).
+    pub fn zeros_like(&self) -> Params {
+        let map = self
+            .map
+            .iter()
+            .map(|(k, v)| (k.clone(), Tensor::zeros(&v.shape)))
+            .collect();
+        Params { cfg: self.cfg.clone(), map }
+    }
+
+    pub fn block(&self, layer: usize) -> BlockView {
+        assert!(layer < self.cfg.n_layers);
+        let mut linears = BTreeMap::new();
+        for name in LINEAR_NAMES {
+            linears.insert(name.to_string(), self.get(name).index0(layer));
+        }
+        BlockView {
+            layer,
+            linears,
+            norm1: self.get("norm1").index0(layer),
+            norm2: self.get("norm2").index0(layer),
+        }
+    }
+
+    pub fn set_block_linear(&mut self, layer: usize, name: &str, w: &Tensor) {
+        self.get_mut(name).set_index0(layer, w);
+    }
+
+    /// Embedding lookup: tokens [b, t] -> activations [b, t, d].
+    pub fn embed(&self, tokens: &[i32], b: usize, t: usize) -> Tensor {
+        let emb = self.get("emb");
+        let d = self.cfg.d_model;
+        assert_eq!(tokens.len(), b * t);
+        let mut out = vec![0.0f32; b * t * d];
+        for (i, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize;
+            assert!(tok < self.cfg.vocab_size, "token {tok} out of range");
+            out[i * d..(i + 1) * d].copy_from_slice(&emb.data[tok * d..(tok + 1) * d]);
+        }
+        Tensor::new(vec![b, t, d], out)
+    }
+
+    // -- checkpoint I/O ----------------------------------------------------
+
+    const MAGIC: &'static [u8; 4] = b"TSQ1";
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(Self::MAGIC)?;
+        write_str(&mut f, &self.cfg.name)?;
+        f.write_all(&(self.map.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.map {
+            write_str(&mut f, name)?;
+            f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            let bytes: Vec<u8> = t.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+            f.write_all(&bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Params> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != Self::MAGIC {
+            bail!("{}: not a TSQ1 checkpoint", path.display());
+        }
+        let cfg_name = read_str(&mut f)?;
+        let cfg = ModelConfig::preset(&cfg_name)?;
+        let n = read_u32(&mut f)? as usize;
+        let mut map = BTreeMap::new();
+        for _ in 0..n {
+            let name = read_str(&mut f)?;
+            let rank = read_u32(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(read_u32(&mut f)? as usize);
+            }
+            let count: usize = shape.iter().product();
+            let mut bytes = vec![0u8; count * 4];
+            f.read_exact(&mut bytes)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            map.insert(name, Tensor::new(shape, data));
+        }
+        let p = Params { cfg, map };
+        for name in PARAM_NAMES {
+            if !p.map.contains_key(name) {
+                bail!("checkpoint missing param {name}");
+            }
+        }
+        Ok(p)
+    }
+}
+
+fn write_str(f: &mut impl Write, s: &str) -> Result<()> {
+    f.write_all(&(s.len() as u32).to_le_bytes())?;
+    f.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_str(f: &mut impl Read) -> Result<String> {
+    let n = read_u32(f)? as usize;
+    if n > 1 << 16 {
+        bail!("string too long ({n})");
+    }
+    let mut buf = vec![0u8; n];
+    f.read_exact(&mut buf)?;
+    Ok(String::from_utf8(buf)?)
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_shapes_match_contract() {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let mut rng = Pcg32::seeded(0);
+        let p = Params::init(&cfg, &mut rng);
+        assert_eq!(p.get("emb").shape, vec![128, 64]);
+        assert_eq!(p.get("down_proj").shape, vec![2, 64, 192]);
+        assert_eq!(p.ordered().len(), 11);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let mut rng = Pcg32::seeded(1);
+        let p = Params::init(&cfg, &mut rng);
+        let dir = std::env::temp_dir().join("tesseraq_test_ckpt");
+        let path = dir.join("nano.tsq");
+        p.save(&path).unwrap();
+        let q = Params::load(&path).unwrap();
+        for name in PARAM_NAMES {
+            assert_eq!(p.get(name), q.get(name), "{name}");
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn block_view_and_writeback() {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let mut rng = Pcg32::seeded(2);
+        let mut p = Params::init(&cfg, &mut rng);
+        let b = p.block(1);
+        assert_eq!(b.linears["q_proj"].shape, vec![64, 64]);
+        let w = Tensor::full(&[64, 64], 7.0);
+        p.set_block_linear(1, "q_proj", &w);
+        assert_eq!(p.block(1).linears["q_proj"], w);
+        assert_ne!(p.block(0).linears["q_proj"], w);
+    }
+
+    #[test]
+    fn embed_gathers_rows() {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let mut rng = Pcg32::seeded(3);
+        let p = Params::init(&cfg, &mut rng);
+        let x = p.embed(&[5, 9], 1, 2);
+        assert_eq!(x.shape, vec![1, 2, 64]);
+        assert_eq!(&x.data[..64], &p.get("emb").data[5 * 64..6 * 64]);
+    }
+}

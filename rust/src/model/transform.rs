@@ -1,0 +1,120 @@
+//! Equivalence-preserving model transforms: norm folding (prerequisite
+//! for rotation/smoothing) and helpers shared by the SmoothQuant / QuaRot
+//! implementations in quant/.
+//!
+//! Conventions: activations are row vectors, linears compute y = x @ W^T
+//! with W [out, in]. "Reader" linears consume the residual stream
+//! (q/k/v/gate/up), "writer" linears produce it (o/down).
+
+use crate::model::Params;
+use crate::tensor::Tensor;
+
+/// Scale the columns (input channels) of W [out, in] by `s`.
+pub fn scale_cols(w: &mut Tensor, s: &[f32]) {
+    let (o, i) = w.dims2();
+    assert_eq!(s.len(), i);
+    for r in 0..o {
+        for c in 0..i {
+            w.data[r * i + c] *= s[c];
+        }
+    }
+}
+
+/// Scale the rows (output channels) of W [out, in] by `s`.
+pub fn scale_rows(w: &mut Tensor, s: &[f32]) {
+    let (o, i) = w.dims2();
+    assert_eq!(s.len(), o);
+    for r in 0..o {
+        let sv = s[r];
+        for c in 0..i {
+            w.data[r * i + c] *= sv;
+        }
+    }
+}
+
+/// Fold RMSNorm weights into the reader linears of every block:
+/// norm(x) .* n @ W^T == norm(x) @ (W diag(n))^T. Norm weights become 1.
+///
+/// norm_f is *not* folded here — the model_fwd_nll artifact takes a
+/// `head_t` matrix input that carries diag(norm_f) (and the rotation,
+/// when QuaRot is active); see quant::rotate.
+pub fn fold_norms(params: &mut Params) {
+    let n_layers = params.cfg.n_layers;
+    for l in 0..n_layers {
+        let n1 = params.get("norm1").index0(l);
+        let n2 = params.get("norm2").index0(l);
+        for name in ["q_proj", "k_proj", "v_proj"] {
+            let mut w = params.get(name).index0(l);
+            scale_cols(&mut w, &n1.data);
+            params.set_block_linear(l, name, &w);
+        }
+        for name in ["gate_proj", "up_proj"] {
+            let mut w = params.get(name).index0(l);
+            scale_cols(&mut w, &n2.data);
+            params.set_block_linear(l, name, &w);
+        }
+        let ones = Tensor::full(&[params.cfg.d_model], 1.0);
+        params.get_mut("norm1").set_index0(l, &ones);
+        params.get_mut("norm2").set_index0(l, &ones);
+    }
+}
+
+/// head_t for an untransformed model: diag(norm_f), with norm_f set to 1.
+pub fn extract_head_t(params: &mut Params) -> Tensor {
+    let d = params.cfg.d_model;
+    let nf = params.get("norm_f").clone();
+    let mut head = Tensor::zeros(&[d, d]);
+    for i in 0..d {
+        head.data[i * d + i] = nf.data[i];
+    }
+    params.set("norm_f", Tensor::full(&[d], 1.0));
+    head
+}
+
+/// Identity head_t (for models evaluated without any transform).
+pub fn identity_head_t(d: usize) -> Tensor {
+    let mut t = Tensor::zeros(&[d, d]);
+    for i in 0..d {
+        t.data[i * d + i] = 1.0;
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::hostfwd::{block_fwd, BlockFwdOpts};
+    use crate::model::{ModelConfig, Params};
+    use crate::tensor::{Pcg32, Tensor};
+
+    #[test]
+    fn fold_norms_preserves_block_output() {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let mut rng = Pcg32::seeded(0);
+        let mut p = Params::init(&cfg, &mut rng);
+        // non-trivial norm weights
+        let shape = vec![cfg.n_layers, cfg.d_model];
+        p.set("norm1", Tensor::from_fn(&shape, |i| 0.5 + (i % 7) as f32 * 0.2));
+        p.set("norm2", Tensor::from_fn(&shape, |i| 0.8 + (i % 5) as f32 * 0.1));
+        let x = Tensor::randn(&[1, 16, cfg.d_model], 1.0, &mut rng);
+        let (y0, _) = block_fwd(&x, &p.block(0), &cfg, &BlockFwdOpts::default());
+        fold_norms(&mut p);
+        assert!(p.get("norm1").data.iter().all(|&v| v == 1.0));
+        let (y1, _) = block_fwd(&x, &p.block(0), &cfg, &BlockFwdOpts::default());
+        assert!(y0.mse(&y1) < 1e-9, "folding changed output: {}", y0.mse(&y1));
+    }
+
+    #[test]
+    fn head_t_extraction() {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let mut rng = Pcg32::seeded(1);
+        let mut p = Params::init(&cfg, &mut rng);
+        let d = cfg.d_model;
+        p.set("norm_f", Tensor::from_fn(&[d], |i| 1.0 + i as f32 * 0.01));
+        let head = extract_head_t(&mut p);
+        assert_eq!(head.shape, vec![d, d]);
+        assert!((head.data[0] - 1.0).abs() < 1e-6);
+        assert!((head.data[d + 1] - 1.01).abs() < 1e-6);
+        assert!(p.get("norm_f").data.iter().all(|&v| v == 1.0));
+    }
+}

@@ -1,0 +1,435 @@
+//! Host-side quantizer — a bit-for-bit mirror of
+//! python/compile/quantize.py (same clamp order, ties-to-even rounding,
+//! SAT_NU saturation). The artifacts do the heavy fake-quant math during
+//! calibration; this module owns initialization, merging, packing and the
+//! serving-time dequant path.
+
+pub mod pack;
+pub mod rotate;
+pub mod smooth;
+
+use crate::tensor::Tensor;
+
+/// Saturation logit for hardened rounding variables (== quantize.SAT_NU).
+pub const SAT_NU: f32 = 100.0;
+/// qmax sentinel meaning "FP activations" (matches act_fakequant).
+pub const A16_SENTINEL: f32 = 65535.0;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupScheme {
+    PerChannel,
+    Group(usize),
+}
+
+impl GroupScheme {
+    pub fn group_size(&self, in_features: usize) -> usize {
+        match self {
+            GroupScheme::PerChannel => in_features,
+            GroupScheme::Group(g) => {
+                assert_eq!(in_features % g, 0, "group {g} !| in {in_features}");
+                *g
+            }
+        }
+    }
+
+    /// Artifact scheme tag ("pc", "g64", ...).
+    pub fn tag(&self) -> String {
+        match self {
+            GroupScheme::PerChannel => "pc".into(),
+            GroupScheme::Group(g) => format!("g{g}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<GroupScheme> {
+        if s == "pc" {
+            Ok(GroupScheme::PerChannel)
+        } else if let Some(g) = s.strip_prefix('g') {
+            Ok(GroupScheme::Group(g.parse()?))
+        } else {
+            anyhow::bail!("bad group scheme {s:?} (want pc|gN)")
+        }
+    }
+}
+
+/// A full quantization configuration in the paper's W{n}A{m}g{k} notation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantConfig {
+    pub w_bits: u32,
+    pub scheme: GroupScheme,
+    /// None = FP16 activations (A16).
+    pub act_bits: Option<u32>,
+}
+
+impl QuantConfig {
+    pub fn new(w_bits: u32, scheme: GroupScheme, act_bits: Option<u32>) -> Self {
+        QuantConfig { w_bits, scheme, act_bits }
+    }
+
+    pub fn weight_only(w_bits: u32, scheme: GroupScheme) -> Self {
+        Self::new(w_bits, scheme, None)
+    }
+
+    pub fn qmax_w(&self) -> f32 {
+        (2u32.pow(self.w_bits) - 1) as f32
+    }
+
+    pub fn qmax_act(&self) -> f32 {
+        match self.act_bits {
+            None => A16_SENTINEL,
+            Some(b) => (2u32.pow(b) - 1) as f32,
+        }
+    }
+
+    /// Paper notation, e.g. "W2A16g128".
+    pub fn label(&self) -> String {
+        let a = self.act_bits.map_or(16, |b| b);
+        let g = match self.scheme {
+            GroupScheme::PerChannel => String::new(),
+            GroupScheme::Group(g) => format!("g{g}"),
+        };
+        format!("W{}A{a}{g}", self.w_bits)
+    }
+}
+
+/// jnp.round semantics: ties to even.
+#[inline]
+pub fn round_te(x: f32) -> f32 {
+    x.round_ties_even()
+}
+
+/// Per-group scale/zero-point, shapes [out, n_groups].
+#[derive(Debug, Clone)]
+pub struct QParams {
+    pub s: Tensor,
+    pub z: Tensor,
+    pub group: usize,
+}
+
+impl QParams {
+    pub fn n_groups(&self) -> usize {
+        self.s.shape[1]
+    }
+}
+
+/// Asymmetric min/max scale with clip factors (paper Eq. 1; mirror of
+/// quantize.minmax_scale). gamma/beta may be scalar (uniform clipping) or
+/// per-group tensors [out, n_groups] (AWQ/LWC output).
+pub fn minmax_scale(
+    w: &Tensor,
+    group: usize,
+    gamma: &ClipFactors,
+    beta: &ClipFactors,
+    qmax: f32,
+) -> QParams {
+    let (o, i) = w.dims2();
+    assert_eq!(i % group, 0);
+    let ng = i / group;
+    let mut s = vec![0.0f32; o * ng];
+    let mut z = vec![0.0f32; o * ng];
+    for r in 0..o {
+        for g in 0..ng {
+            let seg = &w.data[r * i + g * group..r * i + (g + 1) * group];
+            let mx = seg.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            let mn = seg.iter().fold(f32::INFINITY, |m, &v| m.min(v));
+            let ga = gamma.at(r, g);
+            let be = beta.at(r, g);
+            let sv = ((ga * mx - be * mn) / qmax).max(1e-9);
+            s[r * ng + g] = sv;
+            z[r * ng + g] = round_te(-be * mn / sv);
+        }
+    }
+    QParams {
+        s: Tensor::new(vec![o, ng], s),
+        z: Tensor::new(vec![o, ng], z),
+        group,
+    }
+}
+
+/// Scalar-or-tensor clip factor.
+pub enum ClipFactors {
+    Uniform(f32),
+    PerGroup(Tensor),
+}
+
+impl ClipFactors {
+    #[inline]
+    fn at(&self, r: usize, g: usize) -> f32 {
+        match self {
+            ClipFactors::Uniform(v) => *v,
+            ClipFactors::PerGroup(t) => t.data[r * t.shape[1] + g],
+        }
+    }
+}
+
+/// Integer codes from round-to-nearest: clamp(round(w/s)+z, 0, qmax).
+pub fn rtn_codes(w: &Tensor, qp: &QParams, qmax: f32) -> Vec<u16> {
+    let (o, i) = w.dims2();
+    let ng = qp.n_groups();
+    let g = qp.group;
+    let mut codes = vec![0u16; o * i];
+    for r in 0..o {
+        for c in 0..i {
+            let gi = c / g;
+            let s = qp.s.data[r * ng + gi];
+            let z = qp.z.data[r * ng + gi];
+            let q = (round_te(w.data[r * i + c] / s) + z).clamp(0.0, qmax);
+            codes[r * i + c] = q as u16;
+        }
+    }
+    codes
+}
+
+/// Dequantize integer codes: s * (q - z), with optional effective scale
+/// override (DST-merged checkpoints store s_eff = 2*sigmoid(v)*s).
+pub fn dequant_codes(codes: &[u16], o: usize, i: usize, qp: &QParams) -> Tensor {
+    let ng = qp.n_groups();
+    let g = qp.group;
+    let mut w = vec![0.0f32; o * i];
+    for r in 0..o {
+        for c in 0..i {
+            let gi = c / g;
+            w[r * i + c] =
+                qp.s.data[r * ng + gi] * (codes[r * i + c] as f32 - qp.z.data[r * ng + gi]);
+        }
+    }
+    Tensor::new(vec![o, i], w)
+}
+
+/// RTN fake-quant in one shot.
+pub fn rtn_qdq(w: &Tensor, qp: &QParams, qmax: f32) -> Tensor {
+    let (o, i) = w.dims2();
+    dequant_codes(&rtn_codes(w, qp, qmax), o, i, qp)
+}
+
+/// floor(W/s) on the group grid (mirror of quantize.w_floor_init).
+pub fn w_floor(w: &Tensor, qp: &QParams) -> Tensor {
+    let (o, i) = w.dims2();
+    let ng = qp.n_groups();
+    let g = qp.group;
+    let mut out = vec![0.0f32; o * i];
+    for r in 0..o {
+        for c in 0..i {
+            let s = qp.s.data[r * ng + c / g];
+            out[r * i + c] = (w.data[r * i + c] / s).floor();
+        }
+    }
+    Tensor::new(vec![o, i], out)
+}
+
+/// Rounding-logit init: sigma^-1(clip(frac(W/s), 1e-4, 1-1e-4)).
+pub fn nu_init(w: &Tensor, qp: &QParams) -> Tensor {
+    let (o, i) = w.dims2();
+    let ng = qp.n_groups();
+    let g = qp.group;
+    let mut out = vec![0.0f32; o * i];
+    for r in 0..o {
+        for c in 0..i {
+            let s = qp.s.data[r * ng + c / g];
+            let ratio = w.data[r * i + c] / s;
+            let frac = (ratio - ratio.floor()).clamp(1e-4, 1.0 - 1e-4);
+            out[r * i + c] = (frac / (1.0 - frac)).ln();
+        }
+    }
+    Tensor::new(vec![o, i], out)
+}
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Hard quant codes from PAR state: clamp(wfloor + 1[nu>0] + z, 0, qmax).
+pub fn hard_codes(wf: &Tensor, nu: &Tensor, qp: &QParams, qmax: f32) -> Vec<u16> {
+    let (o, i) = wf.dims2();
+    let ng = qp.n_groups();
+    let g = qp.group;
+    let mut codes = vec![0u16; o * i];
+    for r in 0..o {
+        for c in 0..i {
+            let z = qp.z.data[r * ng + c / g];
+            let alpha = if nu.data[r * i + c] > 0.0 { 1.0 } else { 0.0 };
+            codes[r * i + c] = (wf.data[r * i + c] + alpha + z).clamp(0.0, qmax) as u16;
+        }
+    }
+    codes
+}
+
+/// Effective dequant scale after DST: s_eff = 2*sigmoid(v)*s.
+pub fn dst_effective_scale(qp: &QParams, v: &Tensor) -> QParams {
+    assert_eq!(qp.s.shape, v.shape);
+    let s = Tensor::new(
+        qp.s.shape.clone(),
+        qp.s
+            .data
+            .iter()
+            .zip(&v.data)
+            .map(|(&s, &vv)| 2.0 * sigmoid(vv) * s)
+            .collect(),
+    );
+    QParams { s, z: qp.z.clone(), group: qp.group }
+}
+
+/// Per-token (row) asymmetric activation fake-quant, in place.
+/// Mirror of quantize.act_fakequant (qmax >= 60000 -> passthrough).
+pub fn act_fakequant_rows(data: &mut [f32], width: usize, qmax: f32) {
+    if qmax >= 60000.0 {
+        return;
+    }
+    for row in data.chunks_mut(width) {
+        let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mn = row.iter().fold(f32::INFINITY, |m, &v| m.min(v));
+        let s = ((mx - mn) / qmax).max(1e-8);
+        let z = round_te(-mn / s);
+        for v in row.iter_mut() {
+            let q = (round_te(*v / s) + z).clamp(0.0, qmax);
+            *v = s * (q - z);
+        }
+    }
+}
+
+/// Number of PAR rounding variables that flipped vs RTN (Table 7): a flip
+/// means hard(nu) != round-to-nearest of the original fractional part.
+pub fn count_flips(w: &Tensor, nu: &Tensor, qp: &QParams) -> usize {
+    let (o, i) = w.dims2();
+    let ng = qp.n_groups();
+    let g = qp.group;
+    let mut flips = 0usize;
+    for r in 0..o {
+        for c in 0..i {
+            let s = qp.s.data[r * ng + c / g];
+            let ratio = w.data[r * i + c] / s;
+            let frac = ratio - ratio.floor();
+            let rtn_up = frac >= 0.5;
+            let par_up = nu.data[r * i + c] > 0.0;
+            if rtn_up != par_up {
+                flips += 1;
+            }
+        }
+    }
+    flips
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg32;
+
+    fn mk(o: usize, i: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg32::seeded(seed);
+        Tensor::randn(&[o, i], 1.0, &mut rng)
+    }
+
+    #[test]
+    fn rtn_error_bounded_by_step() {
+        let w = mk(8, 32, 0);
+        let qp = minmax_scale(&w, 16, &ClipFactors::Uniform(1.0),
+                              &ClipFactors::Uniform(1.0), 15.0);
+        let what = rtn_qdq(&w, &qp, 15.0);
+        for r in 0..8 {
+            for c in 0..32 {
+                let s = qp.s.data[r * 2 + c / 16];
+                let err = (w.data[r * 32 + c] - what.data[r * 32 + c]).abs();
+                assert!(err <= 0.75 * s + 1e-6, "err {err} step {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn nu_init_reconstructs_weight() {
+        // soft qdq with nu_init and v=0 must reproduce w (inside clamp)
+        let w = mk(4, 32, 1);
+        let qmax = 15.0;
+        let qp = minmax_scale(&w, 8, &ClipFactors::Uniform(1.0),
+                              &ClipFactors::Uniform(1.0), qmax);
+        let wf = w_floor(&w, &qp);
+        let nu = nu_init(&w, &qp);
+        let ng = qp.n_groups();
+        let mut max_err = 0.0f32;
+        let mut interior = 0usize;
+        for r in 0..4 {
+            for c in 0..32 {
+                let s = qp.s.data[r * ng + c / 8];
+                let z = qp.z.data[r * ng + c / 8];
+                let alpha = sigmoid(nu.data[r * 32 + c]);
+                let raw = wf.data[r * 32 + c] + alpha + z;
+                if raw < 0.0 || raw > qmax {
+                    continue; // clamped boundary point: error up to one step
+                }
+                interior += 1;
+                let what = s * (raw - z);
+                let err = (what - w.data[r * 32 + c]).abs() / s;
+                max_err = max_err.max(err);
+            }
+        }
+        assert!(interior > 64, "too few interior points ({interior})");
+        assert!(max_err < 0.01, "interior reconstruction err {max_err}");
+    }
+
+    #[test]
+    fn hard_codes_within_range() {
+        let w = mk(4, 16, 2);
+        let qmax = 3.0;
+        let qp = minmax_scale(&w, 16, &ClipFactors::Uniform(1.0),
+                              &ClipFactors::Uniform(1.0), qmax);
+        let wf = w_floor(&w, &qp);
+        let nu = nu_init(&w, &qp);
+        let codes = hard_codes(&wf, &nu, &qp, qmax);
+        assert!(codes.iter().all(|&c| c <= 3));
+    }
+
+    #[test]
+    fn dst_scale_identity_at_zero() {
+        let w = mk(4, 16, 3);
+        let qp = minmax_scale(&w, 16, &ClipFactors::Uniform(1.0),
+                              &ClipFactors::Uniform(1.0), 15.0);
+        let v = Tensor::zeros(&qp.s.shape);
+        let qp2 = dst_effective_scale(&qp, &v);
+        for (a, b) in qp.s.data.iter().zip(&qp2.s.data) {
+            assert!((a - b).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn act_fakequant_row_levels() {
+        let mut rng = Pcg32::seeded(4);
+        let mut x: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+        let orig = x.clone();
+        act_fakequant_rows(&mut x, 16, 7.0);
+        assert_ne!(x, orig);
+        for row in x.chunks(16) {
+            let mut uniq: Vec<f32> = row.to_vec();
+            uniq.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            uniq.dedup_by(|a, b| (*a - *b).abs() < 1e-7);
+            assert!(uniq.len() <= 8, "more than 2^3 levels per token");
+        }
+        // sentinel passthrough
+        let mut y = orig.clone();
+        act_fakequant_rows(&mut y, 16, A16_SENTINEL);
+        assert_eq!(y, orig);
+    }
+
+    #[test]
+    fn flips_zero_at_rtn_init() {
+        let w = mk(4, 32, 5);
+        let qp = minmax_scale(&w, 32, &ClipFactors::Uniform(1.0),
+                              &ClipFactors::Uniform(1.0), 3.0);
+        let nu = nu_init(&w, &qp);
+        // nu_init gives sigmoid(nu) = frac, so "nu > 0" == "frac > 0.5" == RTN
+        assert_eq!(count_flips(&w, &nu, &qp), 0);
+    }
+
+    #[test]
+    fn quant_config_labels() {
+        assert_eq!(
+            QuantConfig::weight_only(2, GroupScheme::Group(128)).label(),
+            "W2A16g128"
+        );
+        assert_eq!(
+            QuantConfig::new(4, GroupScheme::PerChannel, Some(4)).label(),
+            "W4A4"
+        );
+        assert_eq!(GroupScheme::parse("g64").unwrap(), GroupScheme::Group(64));
+        assert_eq!(GroupScheme::parse("pc").unwrap(), GroupScheme::PerChannel);
+        assert!(GroupScheme::parse("x2").is_err());
+    }
+}

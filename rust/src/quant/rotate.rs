@@ -1,0 +1,149 @@
+//! QuaRot-style randomized orthogonal rotation of the residual stream.
+//!
+//! R = diag(signs) · H/sqrt(d) applied to the whole residual stream:
+//! reader linears get W <- W R (rows through the signed Hadamard), writer
+//! linears get W <- R^T W (columns), the embedding rows rotate, and the
+//! final-norm weight folds into head_t = H diag(norm_f) H (the random
+//! signs cancel). Activation outliers spread across channels, which is
+//! what makes W4A4/W3A3 viable (paper Table 3).
+//!
+//! The paper's *online* per-FFN Hadamard (down_proj input) is not
+//! reproduced — documented in DESIGN.md §2 substitutions.
+
+use crate::model::transform::{extract_head_t, fold_norms};
+use crate::model::Params;
+use crate::tensor::linalg::{hadamard_inplace, signed_hadamard_inplace};
+use crate::tensor::{Pcg32, Tensor};
+
+pub struct Rotation {
+    pub signs: Vec<f32>,
+}
+
+impl Rotation {
+    pub fn random(d: usize, seed: u64) -> Rotation {
+        let mut rng = Pcg32::seeded(seed);
+        Rotation {
+            signs: (0..d).map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 }).collect(),
+        }
+    }
+
+    /// Right-multiply rows by R: each row r <- signed_hadamard(r).
+    pub fn rotate_rows(&self, w: &mut Tensor) {
+        signed_hadamard_inplace(&mut w.data, &self.signs);
+    }
+
+    /// Left-multiply by R^T = H diag(signs): each column c <- H (s .* c).
+    pub fn rotate_cols(&self, w: &mut Tensor) {
+        let mut wt = w.transpose2d();
+        self.rotate_rows(&mut wt);
+        *w = wt.transpose2d();
+    }
+}
+
+/// Apply the rotation to a model in place and return the `head_t` matrix
+/// the model_fwd_nll artifact needs. Folds all norms first.
+pub fn rotate_model(params: &mut Params, seed: u64) -> Tensor {
+    let d = params.cfg.d_model;
+    assert!(d.is_power_of_two(), "rotation needs power-of-two d_model");
+    fold_norms(params);
+    let head_diag = extract_head_t(params); // diag(norm_f)
+    let rot = Rotation::random(d, seed);
+
+    // Embedding rows live in the residual basis.
+    let mut emb = params.get("emb").clone();
+    rot.rotate_rows(&mut emb);
+    params.set("emb", emb);
+
+    for l in 0..params.cfg.n_layers {
+        for name in ["q_proj", "k_proj", "v_proj", "gate_proj", "up_proj"] {
+            let mut w = params.get(name).index0(l);
+            rot.rotate_rows(&mut w); // readers: W <- W R
+            params.set_block_linear(l, name, &w);
+        }
+        for name in ["o_proj", "down_proj"] {
+            let mut w = params.get(name).index0(l);
+            rot.rotate_cols(&mut w); // writers: W <- R^T W
+            params.set_block_linear(l, name, &w);
+        }
+    }
+
+    // head_t = R^T diag(nf) R = H diag(nf) H (signs cancel).
+    let mut head = head_diag;
+    // rows: head <- head H  (apply plain hadamard to each row)
+    hadamard_inplace(&mut head.data, d);
+    // cols: head <- H head
+    let mut ht = head.transpose2d();
+    hadamard_inplace(&mut ht.data, d);
+    ht.transpose2d()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::hostfwd::{block_fwd, BlockFwdOpts};
+    use crate::model::ModelConfig;
+
+    #[test]
+    fn rotation_is_orthogonal() {
+        let d = 64;
+        let rot = Rotation::random(d, 0);
+        let mut m = Tensor::zeros(&[d, d]);
+        for i in 0..d {
+            m.data[i * d + i] = 1.0;
+        }
+        // R^T R == I
+        let mut r = m.clone();
+        rot.rotate_rows(&mut r); // r = I R = R
+        let mut rtr = r.clone();
+        rot.rotate_cols(&mut rtr); // R^T R
+        for i in 0..d {
+            for j in 0..d {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (rtr.data[i * d + j] - want).abs() < 1e-4,
+                    "({i},{j}) = {}",
+                    rtr.data[i * d + j]
+                );
+            }
+        }
+    }
+
+    /// Rotated block preserves residual-stream semantics: for input x,
+    /// block_rot(x R) == block_orig(x) R.
+    #[test]
+    fn rotated_block_is_equivalent() {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let mut rng = Pcg32::seeded(1);
+        let mut p = Params::init(&cfg, &mut rng);
+        let shape = vec![cfg.n_layers, cfg.d_model];
+        p.set("norm1", Tensor::from_fn(&shape, |i| 0.7 + (i % 5) as f32 * 0.1));
+        p.set("norm2", Tensor::from_fn(&shape, |i| 0.9 + (i % 3) as f32 * 0.1));
+        let x = Tensor::randn(&[1, 8, cfg.d_model], 1.0, &mut rng);
+        let (y_orig, _) = block_fwd(&x, &p.block(0), &cfg, &BlockFwdOpts::default());
+
+        let mut p_rot = p.clone();
+        let _head = rotate_model(&mut p_rot, 99);
+        let rot = Rotation::random(cfg.d_model, 99);
+        let mut x_rot = x.clone();
+        rot.rotate_rows(&mut x_rot);
+        let (y_rot, _) = block_fwd(&x_rot, &p_rot.block(0), &cfg, &BlockFwdOpts::default());
+        let mut y_want = y_orig.clone();
+        rot.rotate_rows(&mut y_want);
+        let err = y_rot.mse(&y_want);
+        assert!(err < 1e-7, "rotation equivalence broke: mse {err}");
+    }
+
+    /// Rotation spreads outliers: max|activation| shrinks.
+    #[test]
+    fn rotation_suppresses_outliers() {
+        let d = 128;
+        let mut x = vec![0.1f32; d];
+        x[7] = 30.0; // a massive outlier channel
+        let rot = Rotation::random(d, 2);
+        let mut t = Tensor::new(vec![1, d], x.clone());
+        rot.rotate_rows(&mut t);
+        let before = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let after = t.abs_max();
+        assert!(after < before * 0.5, "outlier {before} -> {after}");
+    }
+}

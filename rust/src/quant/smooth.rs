@@ -1,0 +1,234 @@
+//! SmoothQuant (Xiao et al.): migrate activation outliers into weights
+//! via per-channel scaling s_j = max|x_j|^alpha / max|w_j|^(1-alpha),
+//! folded into an equivalence-preserving carrier:
+//!   q/k/v   <- carrier norm1,     gate/up <- carrier norm2,
+//!   o_proj  <- carrier v_proj rows, down_proj <- carrier up_proj rows.
+//! (the paper smooths linear inputs; the gated-MLP carrier for down_proj
+//! works because silu(gate) is untouched while up rows scale.)
+
+use std::collections::BTreeMap;
+
+use crate::model::hostfwd::{block_fwd, BlockFwdOpts, Taps};
+use crate::model::transform::{scale_cols, scale_rows};
+use crate::model::Params;
+use crate::tensor::Tensor;
+
+/// Per-channel max|activation| from a tap matrix [rows, ch].
+pub fn act_absmax(x: &Tensor) -> Vec<f32> {
+    let (rows, ch) = x.dims2();
+    let mut m = vec![0.0f32; ch];
+    for r in 0..rows {
+        for c in 0..ch {
+            m[c] = m[c].max(x.data[r * ch + c].abs());
+        }
+    }
+    m
+}
+
+/// Per-input-channel max|w| of W [out, in].
+pub fn weight_col_absmax(w: &Tensor) -> Vec<f32> {
+    let (o, i) = w.dims2();
+    let mut m = vec![0.0f32; i];
+    for r in 0..o {
+        for c in 0..i {
+            m[c] = m[c].max(w.data[r * i + c].abs());
+        }
+    }
+    m
+}
+
+pub fn smooth_scales(act_max: &[f32], w_max: &[f32], alpha: f32) -> Vec<f32> {
+    act_max
+        .iter()
+        .zip(w_max)
+        .map(|(&a, &w)| {
+            let s = a.max(1e-5).powf(alpha) / w.max(1e-5).powf(1.0 - alpha);
+            s.clamp(1e-4, 1e4)
+        })
+        .collect()
+}
+
+/// Apply SmoothQuant to every block using activation taps collected by a
+/// host forward pass over `calib_x` [b, t, d]. Returns the per-block,
+/// per-site scales used (for inspection/tests).
+pub fn smoothquant(
+    params: &mut Params,
+    calib_x: &Tensor,
+    alpha: f32,
+) -> Vec<BTreeMap<String, Vec<f32>>> {
+    let cfg = params.cfg.clone();
+    let mut x = calib_x.clone();
+    let mut all_scales = Vec::new();
+    for l in 0..cfg.n_layers {
+        let bw = params.block(l);
+        let opts = BlockFwdOpts { act_qmax: None, collect: true };
+        let (y, taps) = block_fwd(&x, &bw, &cfg, &opts);
+        let scales = smooth_block(params, l, &taps, alpha);
+        all_scales.push(scales);
+        x = y;
+    }
+    all_scales
+}
+
+fn smooth_block(
+    params: &mut Params,
+    l: usize,
+    taps: &Taps,
+    alpha: f32,
+) -> BTreeMap<String, Vec<f32>> {
+    let mut out = BTreeMap::new();
+
+    // site 1: qkv input, carrier norm1
+    {
+        let am = act_absmax(&taps["qkv_in"]);
+        let mut wm = vec![0.0f32; am.len()];
+        for name in ["q_proj", "k_proj", "v_proj"] {
+            let w = params.get(name).index0(l);
+            for (m, v) in wm.iter_mut().zip(weight_col_absmax(&w)) {
+                *m = m.max(v);
+            }
+        }
+        let s = smooth_scales(&am, &wm, alpha);
+        for name in ["q_proj", "k_proj", "v_proj"] {
+            let mut w = params.get(name).index0(l);
+            scale_cols(&mut w, &s);
+            params.set_block_linear(l, name, &w);
+        }
+        let mut n1 = params.get("norm1").index0(l);
+        for (nv, sv) in n1.data.iter_mut().zip(&s) {
+            *nv /= sv;
+        }
+        params.get_mut("norm1").set_index0(l, &n1);
+        out.insert("qkv".into(), s);
+    }
+
+    // site 2: o_proj input, carrier v_proj rows
+    {
+        let am = act_absmax(&taps["o_in"]);
+        let w = params.get("o_proj").index0(l);
+        let wm = weight_col_absmax(&w);
+        let s = smooth_scales(&am, &wm, alpha);
+        let mut wo = w;
+        scale_cols(&mut wo, &s);
+        params.set_block_linear(l, "o_proj", &wo);
+        // o_proj input channel j is v head-dim lane j (heads concatenated):
+        // v_proj output rows divide by s (with GQA, kv rows are repeated
+        // `rep` times across heads; average the repeats' scales).
+        let cfg = &params.cfg;
+        let rep = cfg.n_heads / cfg.n_kv_heads;
+        let hd = cfg.head_dim();
+        let mut inv = vec![0.0f32; cfg.d_kv()];
+        for kvh in 0..cfg.n_kv_heads {
+            for t in 0..hd {
+                let mut acc = 0.0f32;
+                for r in 0..rep {
+                    acc += 1.0 / s[(kvh * rep + r) * hd + t];
+                }
+                inv[kvh * hd + t] = acc / rep as f32;
+            }
+        }
+        let mut wv = params.get("v_proj").index0(l);
+        scale_rows(&mut wv, &inv);
+        params.set_block_linear(l, "v_proj", &wv);
+        out.insert("o".into(), s);
+    }
+
+    // site 3: gate/up input, carrier norm2
+    {
+        let am = act_absmax(&taps["mlp_in"]);
+        let mut wm = vec![0.0f32; am.len()];
+        for name in ["gate_proj", "up_proj"] {
+            let w = params.get(name).index0(l);
+            for (m, v) in wm.iter_mut().zip(weight_col_absmax(&w)) {
+                *m = m.max(v);
+            }
+        }
+        let s = smooth_scales(&am, &wm, alpha);
+        for name in ["gate_proj", "up_proj"] {
+            let mut w = params.get(name).index0(l);
+            scale_cols(&mut w, &s);
+            params.set_block_linear(l, name, &w);
+        }
+        let mut n2 = params.get("norm2").index0(l);
+        for (nv, sv) in n2.data.iter_mut().zip(&s) {
+            *nv /= sv;
+        }
+        params.get_mut("norm2").set_index0(l, &n2);
+        out.insert("mlp".into(), s);
+    }
+
+    // site 4: down_proj input, carrier up_proj rows
+    {
+        let am = act_absmax(&taps["down_in"]);
+        let w = params.get("down_proj").index0(l);
+        let wm = weight_col_absmax(&w);
+        let s = smooth_scales(&am, &wm, alpha);
+        let mut wd = w;
+        scale_cols(&mut wd, &s);
+        params.set_block_linear(l, "down_proj", &wd);
+        let inv: Vec<f32> = s.iter().map(|v| 1.0 / v).collect();
+        let mut wu = params.get("up_proj").index0(l);
+        scale_rows(&mut wu, &inv);
+        params.set_block_linear(l, "up_proj", &wu);
+        out.insert("down".into(), s);
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelConfig, Params};
+    use crate::tensor::Pcg32;
+
+    #[test]
+    fn smoothquant_preserves_model_function() {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let mut rng = Pcg32::seeded(0);
+        let mut p = Params::init(&cfg, &mut rng);
+        let x = Tensor::randn(&[2, 16, cfg.d_model], 1.0, &mut rng);
+        // full-model-ish check: run both blocks sequentially
+        let run = |p: &Params| {
+            let mut h = x.clone();
+            for l in 0..cfg.n_layers {
+                let (y, _) = block_fwd(&h, &p.block(l), &cfg, &BlockFwdOpts::default());
+                h = y;
+            }
+            h
+        };
+        let y0 = run(&p);
+        smoothquant(&mut p, &x, 0.5);
+        let y1 = run(&p);
+        let err = y0.mse(&y1);
+        assert!(err < 1e-6, "smoothquant changed the function: mse {err}");
+    }
+
+    #[test]
+    fn smoothing_reduces_act_outlier_ratio() {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let mut rng = Pcg32::seeded(1);
+        let mut p = Params::init(&cfg, &mut rng);
+        // inject an outlier channel into block-0 qkv input by scaling norm1
+        let mut n1 = p.get("norm1").clone();
+        n1.data[3] = 25.0;
+        p.set("norm1", n1);
+        let x = Tensor::randn(&[2, 16, cfg.d_model], 1.0, &mut rng);
+        let taps_before = {
+            let opts = BlockFwdOpts { act_qmax: None, collect: true };
+            block_fwd(&x, &p.block(0), &cfg, &opts).1
+        };
+        let am0 = act_absmax(&taps_before["qkv_in"]);
+        let ratio0 = am0.iter().cloned().fold(0.0f32, f32::max)
+            / (am0.iter().sum::<f32>() / am0.len() as f32);
+        smoothquant(&mut p, &x, 0.5);
+        let taps_after = {
+            let opts = BlockFwdOpts { act_qmax: None, collect: true };
+            block_fwd(&x, &p.block(0), &cfg, &opts).1
+        };
+        let am1 = act_absmax(&taps_after["qkv_in"]);
+        let ratio1 = am1.iter().cloned().fold(0.0f32, f32::max)
+            / (am1.iter().sum::<f32>() / am1.len() as f32);
+        assert!(ratio1 < ratio0, "outlier ratio {ratio0} -> {ratio1}");
+    }
+}

@@ -1,0 +1,138 @@
+//! Result reporting: Markdown tables printed to stdout and written to
+//! results/, matching the row/column shapes of the paper's tables.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut s = String::new();
+        let _ = writeln!(s, "### {}\n", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let parts: Vec<String> = cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}", w = w))
+                .collect();
+            format!("| {} |", parts.join(" | "))
+        };
+        let _ = writeln!(s, "{}", line(&self.headers, &widths));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        let _ = writeln!(s, "{}", line(&sep, &widths));
+        for row in &self.rows {
+            let _ = writeln!(s, "{}", line(row, &widths));
+        }
+        s
+    }
+
+    /// Print to stdout and persist under results/<name>.md.
+    pub fn emit(&self, name: &str) -> Result<PathBuf> {
+        let md = self.to_markdown();
+        println!("\n{md}");
+        let dir = results_dir();
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{name}.md"));
+        std::fs::write(&path, &md)?;
+        Ok(path)
+    }
+}
+
+pub fn results_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("TESSERAQ_RESULTS") {
+        return d.into();
+    }
+    // next to artifacts/
+    let art = crate::default_artifact_dir();
+    art.parent().map(|p| p.join("results")).unwrap_or_else(|| "results".into())
+}
+
+pub fn fmt_ppl(p: f64) -> String {
+    if !p.is_finite() || p > 1e4 {
+        format!("{:.1e}", p)
+    } else {
+        format!("{p:.2}")
+    }
+}
+
+pub fn fmt_acc(a: f64) -> String {
+    format!("{:.2}", a * 100.0)
+}
+
+pub fn fmt_bytes(b: usize) -> String {
+    if b > 1 << 20 {
+        format!("{:.1}MB", b as f64 / (1 << 20) as f64)
+    } else {
+        format!("{:.1}KB", b as f64 / 1024.0)
+    }
+}
+
+/// Append a section to EXPERIMENTS.md-style logs under results/.
+pub fn append_log(file: &str, text: &str) -> Result<()> {
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(file);
+    let mut cur = std::fs::read_to_string(&path).unwrap_or_default();
+    cur.push_str(text);
+    cur.push('\n');
+    std::fs::write(&path, cur)?;
+    Ok(())
+}
+
+pub fn exists(p: &Path) -> bool {
+    p.exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new("Demo", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.lines().filter(|l| l.starts_with('|')).count() == 3);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_ppl(6.816), "6.82");
+        assert!(fmt_ppl(2.9e6).contains('e'));
+        assert_eq!(fmt_acc(0.5927), "59.27");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,227 @@
+//! Parser for `artifacts/manifest.json` — the machine-readable contract
+//! emitted by python/compile/aot.py describing every HLO artifact's
+//! positional inputs/outputs and the model/quant metadata.
+//!
+//! Decoded with the in-tree JSON parser (offline environment, no serde).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+    pub param_names: Vec<String>,
+    pub linear_names: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<String>,
+    pub meta: Meta,
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Meta {
+    pub size: String,
+    pub kind: String,
+    pub scheme: Option<String>,
+    pub batch: Option<usize>,
+    pub bits: Option<u32>,
+    pub group: Option<usize>,
+    pub model: ModelMeta,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub calib_batch: usize,
+    pub sat_nu: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub max_seq: usize,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
+}
+
+fn strings(j: &Json) -> Result<Vec<String>> {
+    j.as_arr()?.iter().map(|v| Ok(v.as_str()?.to_string())).collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let artifacts = j
+            .get("artifacts")?
+            .as_arr()?
+            .iter()
+            .map(ArtifactSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            artifacts,
+            param_names: strings(j.get("param_names")?)?,
+            linear_names: strings(j.get("linear_names")?)?,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name).with_context(|| {
+            let known: Vec<_> = self.artifacts.iter().map(|a| a.name.as_str()).collect();
+            format!("artifact {name:?} not in manifest; known: {known:?}")
+        })
+    }
+
+    /// Artifacts grouped by (kind, size).
+    pub fn by_kind(&self) -> HashMap<(String, String), Vec<&ArtifactSpec>> {
+        let mut map: HashMap<(String, String), Vec<&ArtifactSpec>> = HashMap::new();
+        for a in &self.artifacts {
+            map.entry((a.meta.kind.clone(), a.meta.size.clone())).or_default().push(a);
+        }
+        map
+    }
+}
+
+impl ArtifactSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let inputs = j
+            .get("inputs")?
+            .as_arr()?
+            .iter()
+            .map(|io| {
+                Ok(IoSpec {
+                    name: io.get("name")?.as_str()?.to_string(),
+                    shape: io
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<_>>()?,
+                    dtype: io.get("dtype")?.as_str()?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArtifactSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            path: j.get("path")?.as_str()?.to_string(),
+            inputs,
+            outputs: strings(j.get("outputs")?)?,
+            meta: Meta::from_json(j.get("meta")?)?,
+        })
+    }
+
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|i| i.name == name)
+            .with_context(|| format!("{}: no input named {name:?}", self.name))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|o| o == name)
+            .with_context(|| format!("{}: no output named {name:?}", self.name))
+    }
+}
+
+impl Meta {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Meta {
+            size: j.get("size")?.as_str()?.to_string(),
+            kind: j.get("kind")?.as_str()?.to_string(),
+            scheme: j.opt("scheme").map(|v| v.as_str().map(str::to_string)).transpose()?,
+            batch: j.opt("batch").map(|v| v.as_usize()).transpose()?,
+            bits: j.opt("bits").map(|v| Ok::<u32, anyhow::Error>(v.as_f64()? as u32)).transpose()?,
+            group: j.opt("group").map(|v| v.as_usize()).transpose()?,
+            model: ModelMeta::from_json(j.get("model")?)?,
+            train_batch: j.get("train_batch")?.as_usize()?,
+            eval_batch: j.get("eval_batch")?.as_usize()?,
+            calib_batch: j.get("calib_batch")?.as_usize()?,
+            sat_nu: j.get("sat_nu")?.as_f64()? as f32,
+        })
+    }
+}
+
+impl ModelMeta {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(ModelMeta {
+            name: j.get("name")?.as_str()?.to_string(),
+            vocab_size: j.get("vocab_size")?.as_usize()?,
+            d_model: j.get("d_model")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            n_kv_heads: j.get("n_kv_heads")?.as_usize()?,
+            d_ff: j.get("d_ff")?.as_usize()?,
+            n_layers: j.get("n_layers")?.as_usize()?,
+            max_seq: j.get("max_seq")?.as_usize()?,
+            rope_theta: j.get("rope_theta")?.as_f64()?,
+            norm_eps: j.get("norm_eps")?.as_f64()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": [{
+        "name": "block_fp_fwd.nano", "path": "block_fp_fwd.nano.hlo.txt",
+        "inputs": [{"name": "x", "shape": [4, 64, 64], "dtype": "float32"}],
+        "outputs": ["y"],
+        "meta": {"size": "nano", "kind": "block_fp_fwd", "batch": 4,
+                 "model": {"name": "nano", "vocab_size": 128, "d_model": 64,
+                           "n_heads": 2, "n_kv_heads": 2, "d_ff": 192,
+                           "n_layers": 2, "max_seq": 64,
+                           "rope_theta": 10000.0, "norm_eps": 1e-5},
+                 "train_batch": 8, "eval_batch": 8, "calib_batch": 4,
+                 "sat_nu": 100.0}
+      }],
+      "param_names": ["emb"], "linear_names": ["q_proj"]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.get("block_fp_fwd.nano").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![4, 64, 64]);
+        assert_eq!(a.meta.model.d_ff, 192);
+        assert_eq!(a.meta.sat_nu, 100.0);
+        assert!(a.meta.scheme.is_none());
+        assert_eq!(a.input_index("x").unwrap(), 0);
+        assert!(a.input_index("nope").is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_lists_known() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let err = format!("{:#}", m.get("missing").unwrap_err());
+        assert!(err.contains("block_fp_fwd.nano"));
+    }
+}

@@ -1,0 +1,192 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the calibration/eval hot paths.
+//!
+//! Interchange is HLO *text* (see python/compile/aot.py and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` ->
+//! `XlaComputation::from_proto` -> `PjRtClient::compile`. Inputs are
+//! uploaded as device buffers (`buffer_from_host_buffer`) and executed via
+//! `execute_b`; the (single, tupled) output is decomposed back into host
+//! tensors. Executables are cached per artifact name.
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+pub use manifest::{ArtifactSpec, Manifest, Meta, ModelMeta};
+
+/// Positional argument for an artifact call.
+pub enum Arg<'a> {
+    F32(&'a Tensor),
+    I32(&'a [i32], &'a [usize]),
+    Scalar(f32),
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Artifact>>>,
+    /// Cumulative (compile_ms, exec_calls) for profiling.
+    pub stats: RefCell<EngineStats>,
+}
+
+#[derive(Default, Debug, Clone)]
+pub struct EngineStats {
+    pub compile_ms: f64,
+    pub exec_calls: u64,
+    pub upload_bytes: u64,
+    pub download_bytes: u64,
+}
+
+pub struct Artifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Engine {
+    pub fn new(dir: PathBuf) -> Result<Self> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(crate::default_artifact_dir())
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn artifact(&self, name: &str) -> Result<Rc<Artifact>> {
+        if let Some(a) = self.cache.borrow().get(name) {
+            return Ok(a.clone());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let path = self.dir.join(&spec.path);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("loading HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        self.stats.borrow_mut().compile_ms += t0.elapsed().as_secs_f64() * 1e3;
+        let art = Rc::new(Artifact { spec, exe });
+        self.cache.borrow_mut().insert(name.to_string(), art.clone());
+        Ok(art)
+    }
+
+    /// Upload a tensor as an f32 device buffer.
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        self.stats.borrow_mut().upload_bytes += (t.data.len() * 4) as u64;
+        self.client
+            .buffer_from_host_buffer(&t.data, &t.shape, None)
+            .context("uploading f32 buffer")
+    }
+
+    pub fn upload_i32(&self, data: &[i32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.stats.borrow_mut().upload_bytes += (data.len() * 4) as u64;
+        self.client
+            .buffer_from_host_buffer(data, shape, None)
+            .context("uploading i32 buffer")
+    }
+
+    pub fn upload_scalar(&self, v: f32) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(&[v], &[], None)
+            .context("uploading scalar")
+    }
+
+    fn upload_arg(&self, a: &Arg) -> Result<xla::PjRtBuffer> {
+        match a {
+            Arg::F32(t) => self.upload(t),
+            Arg::I32(d, s) => self.upload_i32(d, s),
+            Arg::Scalar(v) => self.upload_scalar(*v),
+        }
+    }
+
+    /// Execute an artifact with host args; returns host tensors.
+    pub fn run(&self, art: &Artifact, args: &[Arg]) -> Result<Vec<Tensor>> {
+        let bufs = self.upload_args(art, args)?;
+        self.run_buffers(art, &bufs)
+    }
+
+    /// Validate shapes and upload all args as device buffers.
+    pub fn upload_args(&self, art: &Artifact, args: &[Arg]) -> Result<Vec<xla::PjRtBuffer>> {
+        let spec = &art.spec;
+        if args.len() != spec.inputs.len() {
+            bail!(
+                "{}: got {} args, expected {}",
+                spec.name,
+                args.len(),
+                spec.inputs.len()
+            );
+        }
+        let mut bufs = Vec::with_capacity(args.len());
+        for (i, (a, io)) in args.iter().zip(&spec.inputs).enumerate() {
+            let (shape, dtype): (Vec<usize>, &str) = match a {
+                Arg::F32(t) => (t.shape.clone(), "float32"),
+                Arg::I32(_, s) => (s.to_vec(), "int32"),
+                Arg::Scalar(_) => (vec![], "float32"),
+            };
+            if shape != io.shape || dtype != io.dtype {
+                bail!(
+                    "{} input #{i} ({}): got {:?}/{}, expected {:?}/{}",
+                    spec.name, io.name, shape, dtype, io.shape, io.dtype
+                );
+            }
+            bufs.push(self.upload_arg(a)?);
+        }
+        Ok(bufs)
+    }
+
+    /// Execute with pre-uploaded device buffers (hot-loop path).
+    pub fn run_buffers<L: std::borrow::Borrow<xla::PjRtBuffer>>(
+        &self,
+        art: &Artifact,
+        bufs: &[L],
+    ) -> Result<Vec<Tensor>> {
+        self.stats.borrow_mut().exec_calls += 1;
+        let outs = art.exe.execute_b(bufs).with_context(|| format!("executing {}", art.spec.name))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .context("downloading result")?;
+        // aot.py lowers with return_tuple=True: single tuple output.
+        let parts = lit.to_tuple().context("decomposing result tuple")?;
+        let mut tensors = Vec::with_capacity(parts.len());
+        let mut dl = 0u64;
+        for p in parts {
+            let shape = p.array_shape().context("output shape")?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let data = p.to_vec::<f32>().context("output to_vec")?;
+            dl += (data.len() * 4) as u64;
+            tensors.push(Tensor::new(dims, data));
+        }
+        self.stats.borrow_mut().download_bytes += dl;
+        Ok(tensors)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+impl Artifact {
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+}

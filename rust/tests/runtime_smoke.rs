@@ -1,0 +1,140 @@
+//! Integration smoke test: the Rust runtime loads, compiles and executes
+//! real AOT artifacts (nano model), and the numerics round-trip.
+//!
+//! Requires `make artifacts` (skips with a message otherwise).
+
+use tesseraq::runtime::{Arg, Engine};
+use tesseraq::tensor::{Pcg32, Tensor};
+
+fn engine() -> Option<Engine> {
+    let dir = tesseraq::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {}", dir.display());
+        return None;
+    }
+    Some(Engine::new(dir).expect("engine"))
+}
+
+#[test]
+fn nano_block_fp_fwd_runs_and_is_causal_free() {
+    let Some(eng) = engine() else { return };
+    let art = eng.artifact("block_fp_fwd.nano").expect("artifact");
+    let spec = art.spec.clone();
+    let mut rng = Pcg32::seeded(0);
+    let mut args: Vec<Tensor> = Vec::new();
+    for io in &spec.inputs {
+        let std = if io.name.starts_with("norm") { 0.0 } else { 0.05 };
+        let mut t = Tensor::randn(&io.shape, std, &mut rng);
+        if io.name.starts_with("norm") {
+            t = Tensor::full(&io.shape, 1.0);
+        }
+        args.push(t);
+    }
+    // qmax_act = A16 sentinel
+    let n = args.len();
+    args[n - 1] = Tensor::scalar(65535.0);
+    let argrefs: Vec<Arg> = args.iter().map(Arg::F32).collect();
+    let outs = eng.run(&art, &argrefs).expect("run");
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].shape, spec.inputs[0].shape);
+    assert!(outs[0].data.iter().all(|v| v.is_finite()));
+    // determinism
+    let outs2 = eng.run(&art, &argrefs).expect("run2");
+    assert_eq!(outs[0].data, outs2[0].data);
+}
+
+#[test]
+fn nano_model_nll_shape_and_range() {
+    let Some(eng) = engine() else { return };
+    let art = eng.artifact("model_fwd_nll.nano").expect("artifact");
+    let spec = art.spec.clone();
+    let mut rng = Pcg32::seeded(1);
+    let tok_shape = spec.inputs[0].shape.clone();
+    let vocab = spec.meta.model.vocab_size;
+    let tokens: Vec<i32> = (0..tok_shape.iter().product::<usize>())
+        .map(|_| rng.below(vocab) as i32)
+        .collect();
+    let mut params: Vec<Tensor> = Vec::new();
+    for io in &spec.inputs[1..spec.inputs.len() - 2] {
+        if io.name.contains("norm") {
+            params.push(Tensor::full(&io.shape, 1.0));
+        } else {
+            let fanin = *io.shape.last().unwrap() as f32;
+            params.push(Tensor::randn(&io.shape, 0.4 / fanin.sqrt(), &mut rng));
+        }
+    }
+    let d = spec.meta.model.d_model;
+    let head_t = tesseraq::model::transform::identity_head_t(d);
+    let mut args: Vec<Arg> = vec![Arg::I32(&tokens, &tok_shape)];
+    args.extend(params.iter().map(Arg::F32));
+    args.push(Arg::F32(&head_t));
+    args.push(Arg::Scalar(65535.0));
+    let outs = eng.run(&art, &args).expect("run");
+    let nll = &outs[0];
+    assert_eq!(nll.shape, vec![tok_shape[0], tok_shape[1] - 1]);
+    // untrained random model: mean NLL ~ ln(vocab)
+    let mean = nll.mean();
+    let expect = (vocab as f64).ln();
+    assert!(
+        (mean - expect).abs() < 1.0,
+        "mean NLL {mean} vs ln(V) {expect}"
+    );
+}
+
+#[test]
+fn arg_shape_validation_rejects_mismatch() {
+    let Some(eng) = engine() else { return };
+    let art = eng.artifact("block_fp_fwd.nano").expect("artifact");
+    let bad = Tensor::zeros(&[1, 2, 3]);
+    let args: Vec<Arg> = art.spec.inputs.iter().map(|_| Arg::F32(&bad)).collect();
+    assert!(eng.run(&art, &args).is_err());
+}
+
+#[test]
+fn qmatmul_artifact_matches_host_dequant() {
+    let Some(eng) = engine() else { return };
+    let art = eng.artifact("qmatmul_w4.nano").expect("artifact");
+    let spec = art.spec.clone();
+    let mut rng = Pcg32::seeded(2);
+    let xs = &spec.inputs[0].shape;
+    let ps = &spec.inputs[1].shape;
+    let ss = &spec.inputs[2].shape;
+    let (m, k) = (xs[0], xs[1]);
+    let o = ps[0];
+    let g = k / ss[1];
+    let bits = 4u32;
+    let per = 32 / bits as usize;
+    let x = Tensor::randn(xs, 1.0, &mut rng);
+    let codes: Vec<u32> = (0..o * k).map(|_| rng.below(16) as u32).collect();
+    let mut packed = vec![0i32; o * ps[1]];
+    for r in 0..o {
+        for j in 0..k {
+            let w = r * ps[1] + j / per;
+            packed[w] =
+                (packed[w] as u32 | (codes[r * k + j] << (bits as usize * (j % per)))) as i32;
+        }
+    }
+    let s = Tensor::from_fn(ss, |_| 0.01 + rng.uniform() as f32 * 0.3);
+    let z = Tensor::from_fn(ss, |_| rng.below(16) as f32);
+    let args = vec![
+        Arg::F32(&x),
+        Arg::I32(&packed, ps),
+        Arg::F32(&s),
+        Arg::F32(&z),
+    ];
+    let y = eng.run(&art, &args).expect("run");
+    // host dequant reference
+    let mut w = vec![0.0f32; o * k];
+    for r in 0..o {
+        for j in 0..k {
+            let gidx = j / g;
+            w[r * k + j] =
+                s.data[r * ss[1] + gidx] * (codes[r * k + j] as f32 - z.data[r * ss[1] + gidx]);
+        }
+    }
+    let wt = Tensor::new(vec![o, k], w);
+    let want = wt.matmul_bt(&x);
+    assert_eq!(y[0].shape, vec![m, o]);
+    let err = y[0].mse(&want).sqrt();
+    assert!(err < 1e-3, "rmse {err}");
+}
