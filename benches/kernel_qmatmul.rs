@@ -27,7 +27,7 @@ fn main() {
             let qp = minmax_scale(&w, g, &ClipFactors::Uniform(1.0),
                                   &ClipFactors::Uniform(1.0), qmax);
             let codes = rtn_codes(&w, &qp, qmax);
-            let pl = PackedLinear::from_codes(&codes, o, k, bits, qp);
+            let pl = PackedLinear::from_codes(&codes, o, k, bits, qp).expect("pack");
             b.iter(&format!("packed w{bits} m={m}"), || {
                 std::hint::black_box(pl.forward(&x));
             });

@@ -42,7 +42,8 @@ fn main() -> anyhow::Result<()> {
         let qcfg = QuantConfig::weight_only(bits, GroupScheme::Group(128));
         let opts = MethodOpts::new(qcfg, ctx.n_calib(), true);
         let q = quantize(&ctx.eng, &base, Method::TesseraQ, &qcfg, &corpus, &opts)?;
-        let packed = ServeModel::packed(&q.params, q.report.as_ref().unwrap(), bits);
+        let report = q.report.as_ref().expect("TesseraQ report");
+        let packed = ServeModel::packed(&q.params, report, bits)?;
         run(&format!("W{bits}A16g128"), &packed)?;
     }
     Ok(())

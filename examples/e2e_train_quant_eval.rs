@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
     let report = tq_report.unwrap();
     let params = tq_params.unwrap();
     let dense = ServeModel::dense(&base);
-    let packed = ServeModel::packed(&params, &report, qcfg.w_bits);
+    let packed = ServeModel::packed(&params, &report, qcfg.w_bits)?;
     for (label, model) in [("FP16 dense", &dense), ("W2 packed", &packed)] {
         let prompts: Vec<Vec<i32>> = (0..4).map(|i| wiki.sample(16, i as u64)).collect();
         let (_, stats) = model.generate(&prompts, if fast { 16 } else { 48 })?;

@@ -39,7 +39,8 @@ fn main() -> anyhow::Result<()> {
         let opts = MethodOpts::new(qcfg, 16, true);
         let q = quantize(&ctx.eng, &base, Method::TesseraQ, &qcfg, &wiki, &opts)?;
         let ppl = ev.perplexity(&q.params, None, 65535.0, &wiki, 16, 3)?;
-        let packed = ServeModel::packed(&q.params, q.report.as_ref().unwrap(), bits);
+        let report = q.report.as_ref().expect("TesseraQ report");
+        let packed = ServeModel::packed(&q.params, report, bits)?;
         let (t1, t4) = bench(&packed)?;
         println!("{:<6} {:<10.3} {:>8} {:>10.1} {:>10.1}", format!("w{bits}"), ppl,
                  fmt_bytes(packed.weight_bytes()), t1, t4);

@@ -126,7 +126,8 @@ pub fn calibrate_lwc(
             for (li, name) in LINEAR_NAMES.iter().enumerate() {
                 gam.insert(name.to_string(), outs[1 + li].clone());
                 bet.insert(name.to_string(), outs[1 + n + li].clone());
-                let st = adam.get_mut(*name).unwrap();
+                let st =
+                    adam.get_mut(*name).expect("adam state exists for every linear name");
                 for s in 0..4 {
                     st[s] = outs[1 + (2 + s) * n + li].clone();
                 }

@@ -10,5 +10,9 @@ pub mod pipeline;
 pub mod pretrain;
 pub mod schedule;
 
-pub use par::{calibrate_tesseraq, BlockTrace, CalibReport, TesseraqConfig};
+pub use par::{
+    calibrate_tesseraq, calibrate_tesseraq_robust, BlockStatus, BlockTrace, CalibReport,
+    TesseraqConfig,
+};
+pub use pipeline::ForwardBackend;
 pub use schedule::Schedule;

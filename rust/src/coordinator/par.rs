@@ -6,19 +6,33 @@
 //! executes the AOT `block_par_step` artifact. Hardened logits receive
 //! exactly-zero gradients inside the artifact, so no masking is needed —
 //! the paper's memory-efficient trick.
+//!
+//! Resilience (`calibrate_tesseraq_robust`): each completed block is
+//! persisted to a checksummed checkpoint so a killed run resumes from the
+//! first incomplete block; numerical sentinels roll the soften loop back
+//! to the last iteration-start snapshot on NaN/Inf/divergence and retry
+//! with a backed-off learning rate before degrading the block to hardened
+//! RTN; artifact compile/execute failures retry with exponential backoff
+//! and then fall back to the host-side reference forward. Every recovery
+//! path warns instead of crashing.
 
 use std::collections::BTreeMap;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Result};
 
-use crate::coordinator::pipeline::{BlockRunner, CalibSet};
+use crate::coordinator::pipeline::{CalibSet, ForwardBackend};
 use crate::coordinator::schedule::Schedule;
-use crate::model::{Params, LINEAR_NAMES};
+use crate::model::{BlockView, Params, LINEAR_NAMES};
 use crate::quant::{
     self, dequant_codes, dst_effective_scale, hard_codes, minmax_scale, nu_init,
     w_floor, ClipFactors, QParams, QuantConfig, SAT_NU,
 };
-use crate::runtime::Engine;
+use crate::robust::checkpoint::fnv1a64;
+use crate::robust::{
+    with_retry, BlockCheckpoint, CheckpointStore, LossHealth, RobustConfig, Sentinel,
+    KILL_MARKER,
+};
+use crate::runtime::{Artifact, Engine};
 use crate::tensor::Tensor;
 
 #[derive(Debug, Clone)]
@@ -61,8 +75,18 @@ impl TesseraqConfig {
     }
 }
 
+/// How a block's final codes were produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockStatus {
+    /// Full PAR/DST optimization ran to completion.
+    Optimized,
+    /// The resilience layer degraded this block to hardened RTN (sentinel
+    /// retry budget exhausted, or no PAR step path available).
+    RtnFallback,
+}
+
 /// Per-block calibration record (Fig. 4 traces + Table 7 flip stats).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct BlockTrace {
     pub layer: usize,
     /// reconstruction MSE after each soften step
@@ -71,6 +95,7 @@ pub struct BlockTrace {
     pub flips: BTreeMap<String, (usize, usize)>,
     /// loss right before any optimization (RTN-equivalent start)
     pub initial_loss: f32,
+    pub status: BlockStatus,
 }
 
 pub struct CalibReport {
@@ -81,9 +106,18 @@ pub struct CalibReport {
     pub wall_s: f64,
 }
 
+impl CalibReport {
+    /// Blocks the resilience layer degraded to RTN.
+    pub fn fallback_blocks(&self) -> Vec<usize> {
+        self.per_block
+            .iter()
+            .filter(|t| t.status == BlockStatus::RtnFallback)
+            .map(|t| t.layer)
+            .collect()
+    }
+}
+
 struct LinearState {
-    o: usize,
-    i: usize,
     qp: QParams,
     wf: Tensor,
     nu: Tensor,
@@ -96,7 +130,6 @@ struct LinearState {
 
 impl LinearState {
     fn init(w: &Tensor, qp: QParams, hardened_start: bool) -> LinearState {
-        let (o, i) = w.dims2();
         let wf = w_floor(w, &qp);
         let mut nu = nu_init(w, &qp);
         if hardened_start {
@@ -106,8 +139,6 @@ impl LinearState {
         }
         let gshape = qp.s.shape.clone();
         LinearState {
-            o,
-            i,
             wf,
             nu: nu.clone(),
             v: Tensor::zeros(&gshape),
@@ -127,6 +158,9 @@ pub type BlockClips = BTreeMap<String, (Tensor, Tensor)>;
 /// (gamma, beta) per-group clip factors from the initializer (None ->
 /// plain min/max). Weights in `params` must already carry any scale
 /// transformation (AWQ fold) — exactly the paper's Fig. 1(a) flow.
+///
+/// Thin wrapper over [`calibrate_tesseraq_robust`] with the default
+/// resilience knobs (sentinels + retries on, no checkpointing).
 pub fn calibrate_tesseraq(
     eng: &Engine,
     params: &mut Params,
@@ -135,102 +169,267 @@ pub fn calibrate_tesseraq(
     n_seq: usize,
     tcfg: &TesseraqConfig,
 ) -> Result<CalibReport> {
+    calibrate_tesseraq_robust(
+        Some(eng), params, clips, tokens, n_seq, tcfg, &RobustConfig::default(),
+    )
+}
+
+/// Fault-tolerant TesseraQ calibration. `eng = None` runs entirely on the
+/// host-forward path (every block degrades to hardened RTN — no PAR step
+/// artifact), which is also what a run with a persistently failing device
+/// converges to.
+pub fn calibrate_tesseraq_robust(
+    eng: Option<&Engine>,
+    params: &mut Params,
+    clips: Option<&[BlockClips]>,
+    tokens: &[i32],
+    n_seq: usize,
+    tcfg: &TesseraqConfig,
+    robust: &RobustConfig,
+) -> Result<CalibReport> {
     let t0 = std::time::Instant::now();
     let size = params.cfg.name.clone();
     let scheme = tcfg.qcfg.scheme.tag();
-    let runner = BlockRunner::new(eng, &size)?;
-    let step_art = eng
-        .artifact(&format!("block_par_step.{size}.{scheme}{}", tcfg.artifact_suffix))
-        .with_context(|| format!("no PAR artifact for {size}/{scheme}"))?;
-    let batch = step_art.spec.meta.batch.unwrap_or(4);
-    ensure!(n_seq % batch == 0, "n_seq {n_seq} not divisible by batch {batch}");
+    if let (Some(e), Some(plan)) = (eng, &robust.faults) {
+        e.set_fault_plan(Some(plan.clone()));
+    }
+
+    let backend = ForwardBackend::new(eng, &params.cfg, &size, &robust.retry);
+
+    // PAR soften-step artifact; unavailable -> hardened RTN per block.
+    let step_art = eng.and_then(|e| {
+        let name = format!("block_par_step.{size}.{scheme}{}", tcfg.artifact_suffix);
+        match with_retry(&robust.retry, &format!("compiling {name}"), || e.artifact(&name)) {
+            Ok(a) => Some(a),
+            Err(err) => {
+                eprintln!(
+                    "[robust] PAR step artifact unavailable; \
+                     degrading to hardened RTN per block: {err:#}"
+                );
+                None
+            }
+        }
+    });
+    let batch = step_art.as_ref().map_or(1, |a| a.spec.meta.batch.unwrap_or(4));
+    if step_art.is_some() {
+        ensure!(n_seq % batch == 0, "n_seq {n_seq} not divisible by batch {batch}");
+    }
 
     let qmax_w = tcfg.qcfg.qmax_w();
     let qmax_act = tcfg.qcfg.qmax_act();
-    let mut set = CalibSet::from_tokens(params, tokens, n_seq);
-    let mut per_block = Vec::new();
-    let mut quantized = Vec::new();
+    let n_layers = params.cfg.n_layers;
 
-    for l in 0..params.cfg.n_layers {
-        let bw = params.block(l);
-        // teacher target on the (quantized-prefix) stream, FP weights
-        let y_all = runner.forward_all(&bw, &set, quant::A16_SENTINEL)?;
-
-        // per-linear PAR state
-        let mut states: BTreeMap<String, LinearState> = BTreeMap::new();
-        for name in LINEAR_NAMES {
-            let w = &bw.linears[name];
-            let g = tcfg.qcfg.scheme.group_size(w.shape[1]);
-            let qp = match clips.and_then(|c| c[l].get(name)) {
-                Some((gm, bt)) => minmax_scale(
-                    w,
-                    g,
-                    &ClipFactors::PerGroup(gm.clone()),
-                    &ClipFactors::PerGroup(bt.clone()),
-                    qmax_w,
-                ),
-                None => minmax_scale(
-                    w,
-                    g,
-                    &ClipFactors::Uniform(1.0),
-                    &ClipFactors::Uniform(1.0),
-                    qmax_w,
-                ),
-            };
-            states.insert(name.to_string(), LinearState::init(w, qp, !tcfg.enable_par));
-        }
-
-        let total_vars: usize = states.values().map(|s| s.nu.data.len()).sum();
-        let mut trace = BlockTrace {
-            layer: l,
-            losses: Vec::new(),
-            flips: BTreeMap::new(),
-            initial_loss: f32::NAN,
-        };
-
-        // per-block constants live on device for the whole PAR loop
-        let consts = BlockConstBufs::new(eng, &bw.norm1, &bw.norm2, &states,
-                                         qmax_w, qmax_act)?;
-
-        // PAR loop
-        let mut t_global = 0u32;
-        for k in 1..=tcfg.iterations {
-            if tcfg.enable_par {
-                let soft = tcfg.schedule.soft_rate(k, tcfg.iterations);
-                let target_hard =
-                    total_vars - (soft * total_vars as f32).ceil() as usize;
-                harden(&mut states, target_hard);
+    // Checkpoint store; resume restores the valid contiguous prefix.
+    let fingerprint = config_fingerprint(params, tcfg, tokens, n_seq);
+    let store = match &robust.checkpoint_dir {
+        Some(dir) => Some(CheckpointStore::new(dir, fingerprint)?),
+        None => None,
+    };
+    let mut per_block: Vec<BlockTrace> = Vec::new();
+    let mut quantized: Vec<BTreeMap<String, (Vec<u16>, QParams)>> = Vec::new();
+    if let Some(store) = &store {
+        if robust.resume {
+            for ckpt in store.load_prefix(n_layers) {
+                merge_block(params, ckpt.trace.layer, &ckpt.quantized);
+                per_block.push(ckpt.trace);
+                quantized.push(ckpt.quantized);
             }
-            for _ in 0..tcfg.steps_per_iter {
-                t_global += 1;
-                let bi = (t_global - 1) as usize;
-                let xb = set.batch(bi, batch);
-                let per = set.t * set.d * batch;
-                let start = (bi % set.n_batches(batch)) * per;
-                let yb = Tensor::new(
-                    vec![batch, set.t, set.d],
-                    y_all.data[start..start + per].to_vec(),
+            if !per_block.is_empty() {
+                eprintln!(
+                    "[robust] resuming: {}/{} blocks restored from {}",
+                    per_block.len(),
+                    n_layers,
+                    store.dir().display()
                 );
-                let loss = par_step(
-                    eng, &step_art, &xb, &yb, &consts, &mut states,
-                    tcfg.lr, t_global as f32,
-                )?;
-                if trace.initial_loss.is_nan() {
-                    trace.initial_loss = loss;
-                }
-                if !tcfg.enable_dst {
-                    for s in states.values_mut() {
-                        s.v = Tensor::zeros(&s.v.shape);
-                        s.m_v = Tensor::zeros(&s.v.shape);
-                        s.u_v = Tensor::zeros(&s.v.shape);
-                    }
-                }
-                trace.losses.push(loss);
+            }
+        } else {
+            store.clear()?;
+        }
+    }
+    let start_block = per_block.len();
+
+    let mut set = CalibSet::from_tokens(params, tokens, n_seq);
+    let prop_qmax = if tcfg.propagate_act_quant { qmax_act } else { quant::A16_SENTINEL };
+    // Rebuild the residual stream through the restored (already merged)
+    // prefix — the same f32 ops as the original pass, so a resumed run
+    // reproduces the interrupted run bit for bit.
+    for l in 0..start_block {
+        let bw_q = params.block(l);
+        set.x = backend.forward_all(&bw_q, &set, prop_qmax)?;
+    }
+
+    for l in start_block..n_layers {
+        let (trace, qblock) = calibrate_block(
+            eng,
+            step_art.as_deref(),
+            &backend,
+            params,
+            clips,
+            &set,
+            l,
+            batch,
+            tcfg,
+            robust,
+            qmax_w,
+            qmax_act,
+        )?;
+        merge_block(params, l, &qblock);
+        if let Some(store) = &store {
+            store.save_block(
+                l,
+                &BlockCheckpoint { trace: trace.clone(), quantized: qblock.clone() },
+            )?;
+        }
+        per_block.push(trace);
+        quantized.push(qblock);
+        if robust.faults.as_ref().is_some_and(|f| f.kill_after_block(l)) {
+            bail!("{KILL_MARKER} after block {l}");
+        }
+        // propagate the stream through the merged quantized block
+        let bw_q = params.block(l);
+        set.x = backend.forward_all(&bw_q, &set, prop_qmax)?;
+    }
+
+    Ok(CalibReport { per_block, quantized, wall_s: t0.elapsed().as_secs_f64() })
+}
+
+/// Hash of everything that determines a calibration run's outputs: the
+/// checkpoint format version, model/quant/schedule configuration, the
+/// calibration tokens, and the (embedding) weights. Stored in every block
+/// checkpoint; a mismatch refuses resume.
+fn config_fingerprint(
+    params: &Params,
+    tcfg: &TesseraqConfig,
+    tokens: &[i32],
+    n_seq: usize,
+) -> u64 {
+    let mut bytes = format!(
+        "v{};model={};quant={};iters={};steps={};lr={};schedule={:?};par={};dst={};prop={};suffix={};n_seq={}",
+        crate::robust::checkpoint::VERSION,
+        params.cfg.name,
+        tcfg.qcfg.label(),
+        tcfg.iterations,
+        tcfg.steps_per_iter,
+        tcfg.lr,
+        tcfg.schedule,
+        tcfg.enable_par,
+        tcfg.enable_dst,
+        tcfg.propagate_act_quant,
+        tcfg.artifact_suffix,
+        n_seq,
+    )
+    .into_bytes();
+    for &t in tokens {
+        bytes.extend_from_slice(&t.to_le_bytes());
+    }
+    // cheap weight identity: the embedding table's raw bits
+    for &v in &params.get("emb").data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    fnv1a64(&bytes)
+}
+
+/// Merge one block's final codes into the model (fake-quant weights).
+fn merge_block(
+    params: &mut Params,
+    layer: usize,
+    qblock: &BTreeMap<String, (Vec<u16>, QParams)>,
+) {
+    for (name, (codes, qp)) in qblock {
+        let o = qp.s.shape[0];
+        let i = codes.len() / o;
+        let wq = dequant_codes(codes, o, i, qp);
+        params.set_block_linear(layer, name, &wq);
+    }
+}
+
+fn init_states(
+    bw: &BlockView,
+    clips: Option<&[BlockClips]>,
+    l: usize,
+    tcfg: &TesseraqConfig,
+    qmax_w: f32,
+) -> BTreeMap<String, LinearState> {
+    let mut states = BTreeMap::new();
+    for name in LINEAR_NAMES {
+        let w = &bw.linears[name];
+        let g = tcfg.qcfg.scheme.group_size(w.shape[1]);
+        let qp = match clips.and_then(|c| c[l].get(name)) {
+            Some((gm, bt)) => minmax_scale(
+                w,
+                g,
+                &ClipFactors::PerGroup(gm.clone()),
+                &ClipFactors::PerGroup(bt.clone()),
+                qmax_w,
+            ),
+            None => minmax_scale(
+                w,
+                g,
+                &ClipFactors::Uniform(1.0),
+                &ClipFactors::Uniform(1.0),
+                qmax_w,
+            ),
+        };
+        states.insert(name.to_string(), LinearState::init(w, qp, !tcfg.enable_par));
+    }
+    states
+}
+
+/// Calibrate one block: PAR/DST when the device path is up, hardened RTN
+/// otherwise. Returns the block trace and the final (codes, QParams) map;
+/// the caller merges them into the model.
+fn calibrate_block(
+    eng: Option<&Engine>,
+    step_art: Option<&Artifact>,
+    backend: &ForwardBackend,
+    params: &Params,
+    clips: Option<&[BlockClips]>,
+    set: &CalibSet,
+    l: usize,
+    batch: usize,
+    tcfg: &TesseraqConfig,
+    robust: &RobustConfig,
+    qmax_w: f32,
+    qmax_act: f32,
+) -> Result<(BlockTrace, BTreeMap<String, (Vec<u16>, QParams)>)> {
+    let bw = params.block(l);
+    let mut states = init_states(&bw, clips, l, tcfg, qmax_w);
+    let mut trace = BlockTrace {
+        layer: l,
+        losses: Vec::new(),
+        flips: BTreeMap::new(),
+        initial_loss: f32::NAN,
+        status: BlockStatus::Optimized,
+    };
+
+    let mut fallback_reason: Option<String> = None;
+    match (eng, step_art) {
+        (Some(e), Some(art)) => {
+            match run_par_loop(
+                e, art, backend, &bw, set, l, batch, tcfg, robust, &mut states, &mut trace,
+                qmax_w, qmax_act,
+            )? {
+                ParOutcome::Done => {}
+                ParOutcome::Fallback(reason) => fallback_reason = Some(reason),
             }
         }
+        _ => fallback_reason = Some("no PAR step path available".to_string()),
+    }
 
-        // final hard merge + stats
-        let mut qblock: BTreeMap<String, (Vec<u16>, QParams)> = BTreeMap::new();
+    let mut qblock = BTreeMap::new();
+    if let Some(reason) = fallback_reason {
+        eprintln!("[robust] block {l}: hardened-RTN fallback ({reason})");
+        trace.losses.clear();
+        trace.initial_loss = 0.0;
+        trace.status = BlockStatus::RtnFallback;
+        for name in LINEAR_NAMES {
+            let s = &states[name];
+            let w = &bw.linears[name];
+            let codes = quant::rtn_codes(w, &s.qp, qmax_w);
+            trace.flips.insert(name.to_string(), (0, codes.len()));
+            qblock.insert(name.to_string(), (codes, s.qp.clone()));
+        }
+    } else {
         for name in LINEAR_NAMES {
             let s = &states[name];
             let w_orig = &bw.linears[name];
@@ -244,20 +443,198 @@ pub fn calibrate_tesseraq(
             } else {
                 s.qp.clone()
             };
-            let wq = dequant_codes(&codes, s.o, s.i, &qp_eff);
-            params.set_block_linear(l, name, &wq);
             qblock.insert(name.to_string(), (codes, qp_eff));
         }
-        per_block.push(trace);
-        quantized.push(qblock);
+    }
+    Ok((trace, qblock))
+}
 
-        // propagate the stream through the merged quantized block
-        let bw_q = params.block(l);
-        let prop_qmax = if tcfg.propagate_act_quant { qmax_act } else { quant::A16_SENTINEL };
-        set.x = runner.forward_all(&bw_q, &set, prop_qmax)?;
+enum ParOutcome {
+    Done,
+    /// Degrade this block to hardened RTN, with the reason for the log.
+    Fallback(String),
+}
+
+enum StepFailure {
+    /// Device execution kept failing after retries — not recoverable by
+    /// rollback, degrade the block.
+    Exec(String),
+    /// NaN/Inf/diverged loss — recoverable by rollback + LR backoff.
+    Numeric(String),
+}
+
+/// Iteration-start snapshot of everything `par_step` mutates, so a bad
+/// iteration can be rolled back exactly (including Adam time `t_global`
+/// and the batch index derived from it).
+struct ParSnapshot {
+    fields: BTreeMap<String, [Tensor; 6]>,
+    t_global: u32,
+    n_losses: usize,
+    initial_loss: f32,
+}
+
+impl ParSnapshot {
+    fn take(
+        states: &BTreeMap<String, LinearState>,
+        t_global: u32,
+        trace: &BlockTrace,
+    ) -> ParSnapshot {
+        let fields = states
+            .iter()
+            .map(|(k, s)| {
+                (
+                    k.clone(),
+                    [
+                        s.nu.clone(),
+                        s.v.clone(),
+                        s.m_nu.clone(),
+                        s.u_nu.clone(),
+                        s.m_v.clone(),
+                        s.u_v.clone(),
+                    ],
+                )
+            })
+            .collect();
+        ParSnapshot {
+            fields,
+            t_global,
+            n_losses: trace.losses.len(),
+            initial_loss: trace.initial_loss,
+        }
     }
 
-    Ok(CalibReport { per_block, quantized, wall_s: t0.elapsed().as_secs_f64() })
+    fn restore(
+        &self,
+        states: &mut BTreeMap<String, LinearState>,
+        t_global: &mut u32,
+        trace: &mut BlockTrace,
+    ) {
+        for (k, f) in &self.fields {
+            if let Some(s) = states.get_mut(k) {
+                s.nu = f[0].clone();
+                s.v = f[1].clone();
+                s.m_nu = f[2].clone();
+                s.u_nu = f[3].clone();
+                s.m_v = f[4].clone();
+                s.u_v = f[5].clone();
+            }
+        }
+        *t_global = self.t_global;
+        trace.losses.truncate(self.n_losses);
+        trace.initial_loss = self.initial_loss;
+    }
+}
+
+fn run_par_loop(
+    eng: &Engine,
+    step_art: &Artifact,
+    backend: &ForwardBackend,
+    bw: &BlockView,
+    set: &CalibSet,
+    l: usize,
+    batch: usize,
+    tcfg: &TesseraqConfig,
+    robust: &RobustConfig,
+    states: &mut BTreeMap<String, LinearState>,
+    trace: &mut BlockTrace,
+    qmax_w: f32,
+    qmax_act: f32,
+) -> Result<ParOutcome> {
+    // teacher target on the (quantized-prefix) stream, FP weights
+    let y_all = backend.forward_all(bw, set, quant::A16_SENTINEL)?;
+
+    // per-block constants live on device for the whole PAR loop
+    let consts = match BlockConstBufs::new(eng, &bw.norm1, &bw.norm2, states, qmax_w, qmax_act)
+    {
+        Ok(c) => c,
+        Err(e) => return Ok(ParOutcome::Fallback(format!("uploading block constants: {e:#}"))),
+    };
+
+    let mut sentinel = Sentinel::new(robust.sentinel);
+    let mut t_global = 0u32;
+    let mut k = 1;
+    while k <= tcfg.iterations {
+        let snap = ParSnapshot::take(states, t_global, trace);
+        if tcfg.enable_par {
+            let total_vars: usize = states.values().map(|s| s.nu.data.len()).sum();
+            let soft = tcfg.schedule.soft_rate(k, tcfg.iterations);
+            let target_hard = total_vars - (soft * total_vars as f32).ceil() as usize;
+            harden(states, target_hard);
+        }
+        let mut failure: Option<StepFailure> = None;
+        for _ in 0..tcfg.steps_per_iter {
+            t_global += 1;
+            let bi = (t_global - 1) as usize;
+            let xb = set.batch(bi, batch);
+            let per = set.t * set.d * batch;
+            let start = (bi % set.n_batches(batch)) * per;
+            let yb = Tensor::new(
+                vec![batch, set.t, set.d],
+                y_all.data[start..start + per].to_vec(),
+            );
+            let lr = tcfg.lr * sentinel.lr_scale;
+            let step_res = with_retry(&robust.retry, "PAR step", || {
+                par_step(eng, step_art, &xb, &yb, &consts, states, lr, t_global as f32)
+            });
+            let mut loss = match step_res {
+                Ok(loss) => loss,
+                Err(e) => {
+                    failure = Some(StepFailure::Exec(format!("{e:#}")));
+                    break;
+                }
+            };
+            if robust.faults.as_ref().is_some_and(|f| f.nan_loss(l, t_global as usize)) {
+                loss = f32::NAN;
+            }
+            match sentinel.observe(loss) {
+                LossHealth::Ok => {
+                    if trace.initial_loss.is_nan() {
+                        trace.initial_loss = loss;
+                    }
+                    if !tcfg.enable_dst {
+                        for s in states.values_mut() {
+                            s.v = Tensor::zeros(&s.v.shape);
+                            s.m_v = Tensor::zeros(&s.v.shape);
+                            s.u_v = Tensor::zeros(&s.v.shape);
+                        }
+                    }
+                    trace.losses.push(loss);
+                }
+                LossHealth::NonFinite => {
+                    failure = Some(StepFailure::Numeric(format!("non-finite loss {loss}")));
+                    break;
+                }
+                LossHealth::Diverged { baseline } => {
+                    failure = Some(StepFailure::Numeric(format!(
+                        "loss {loss:.3e} diverged (baseline {baseline:.3e})"
+                    )));
+                    break;
+                }
+            }
+        }
+        match failure {
+            None => k += 1,
+            Some(StepFailure::Exec(reason)) => {
+                return Ok(ParOutcome::Fallback(format!("PAR step execution: {reason}")));
+            }
+            Some(StepFailure::Numeric(reason)) => match sentinel.trip() {
+                Some(scale) => {
+                    eprintln!(
+                        "[robust] block {l} iteration {k}: {reason}; rolling back to the \
+                         iteration-start snapshot, retrying with lr scale {scale}"
+                    );
+                    snap.restore(states, &mut t_global, trace);
+                }
+                None => {
+                    return Ok(ParOutcome::Fallback(format!(
+                        "{reason} after {} rollbacks",
+                        sentinel.retries_used()
+                    )));
+                }
+            },
+        }
+    }
+    Ok(ParOutcome::Done)
 }
 
 /// Harden phase: pool HS(nu) = |sigmoid(nu) - 0.5| across all linears of
@@ -289,7 +666,7 @@ fn harden(states: &mut BTreeMap<String, LinearState>, target_hard: usize) {
         f32::INFINITY
     } else {
         let (_, nth, _) =
-            scores.select_nth_unstable_by(need - 1, |a, b| a.partial_cmp(b).unwrap());
+            scores.select_nth_unstable_by(need - 1, |a, b| a.total_cmp(b));
         *nth
     };
     let mut hardened = 0usize;
@@ -355,10 +732,9 @@ impl BlockConstBufs {
 
 /// One soften-phase Adam step through the artifact; returns the loss and
 /// updates all host-side state in place.
-#[allow(clippy::too_many_arguments)]
 fn par_step(
     eng: &Engine,
-    art: &crate::runtime::Artifact,
+    art: &Artifact,
     x: &Tensor,
     y: &Tensor,
     consts: &BlockConstBufs,
@@ -403,7 +779,7 @@ fn par_step(
     for (fi, field) in ["nu", "v", "m_nu", "u_nu", "m_v", "u_v"].iter().enumerate() {
         for (li, name) in LINEAR_NAMES.iter().enumerate() {
             let t = outs[1 + fi * n + li].clone();
-            let s = states.get_mut(*name).unwrap();
+            let s = states.get_mut(*name).expect("state exists for every linear name");
             match *field {
                 "nu" => s.nu = t,
                 "v" => s.v = t,
@@ -465,5 +841,57 @@ mod tests {
         let hard = hard_codes(&st.wf, &st.nu, &qp, 3.0);
         let rtn = quant::rtn_codes(&w, &qp, 3.0);
         assert_eq!(hard, rtn);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let w = Tensor::from_fn(&[2, 8], |i| i as f32 * 0.21 - 1.3);
+        let qp = minmax_scale(&w, 8, &ClipFactors::Uniform(1.0),
+                              &ClipFactors::Uniform(1.0), 3.0);
+        let mut states = BTreeMap::new();
+        states.insert("q_proj".to_string(), LinearState::init(&w, qp, false));
+        let mut trace = BlockTrace {
+            layer: 0,
+            losses: vec![1.0, 0.5],
+            flips: BTreeMap::new(),
+            initial_loss: 1.0,
+            status: BlockStatus::Optimized,
+        };
+        let mut t_global = 7u32;
+        let snap = ParSnapshot::take(&states, t_global, &trace);
+        // corrupt everything the soften loop mutates
+        for s in states.values_mut() {
+            for x in s.nu.data.iter_mut() {
+                *x = f32::NAN;
+            }
+            s.m_nu = Tensor::full(&s.m_nu.shape, 9.0);
+        }
+        trace.losses.push(f32::NAN);
+        trace.initial_loss = f32::NAN;
+        t_global = 99;
+        snap.restore(&mut states, &mut t_global, &mut trace);
+        assert_eq!(t_global, 7);
+        assert_eq!(trace.losses, vec![1.0, 0.5]);
+        assert_eq!(trace.initial_loss, 1.0);
+        assert!(states["q_proj"].nu.data.iter().all(|x| x.is_finite()));
+        assert!(states["q_proj"].m_nu.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn fingerprint_tracks_config_and_data() {
+        let cfg = crate::model::ModelConfig::preset("nano").unwrap();
+        let mut rng = crate::tensor::Pcg32::seeded(0);
+        let p = Params::init(&cfg, &mut rng);
+        let qcfg = QuantConfig::weight_only(2, crate::quant::GroupScheme::Group(32));
+        let tcfg = TesseraqConfig::fast(qcfg);
+        let tokens: Vec<i32> = (0..64).map(|i| i % 100).collect();
+        let a = config_fingerprint(&p, &tcfg, &tokens, 4);
+        assert_eq!(a, config_fingerprint(&p, &tcfg, &tokens, 4), "deterministic");
+        let mut t2 = tcfg.clone();
+        t2.lr *= 2.0;
+        assert_ne!(a, config_fingerprint(&p, &t2, &tokens, 4), "lr changes fingerprint");
+        let mut tok2 = tokens.clone();
+        tok2[0] += 1;
+        assert_ne!(a, config_fingerprint(&p, &tcfg, &tok2, 4), "tokens change fingerprint");
     }
 }

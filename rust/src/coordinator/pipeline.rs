@@ -5,7 +5,9 @@ use std::rc::Rc;
 
 use anyhow::{ensure, Result};
 
+use crate::model::hostfwd::{block_fwd, BlockFwdOpts};
 use crate::model::{BlockView, ModelConfig, Params, LINEAR_NAMES};
+use crate::robust::{with_retry, RetryPolicy};
 use crate::runtime::{Arg, Artifact, Engine};
 use crate::tensor::Tensor;
 
@@ -92,5 +94,72 @@ impl<'e> BlockRunner<'e> {
         args.push(Arg::Scalar(qmax_act));
         let mut outs = self.eng.run(&self.art, &args)?;
         Ok(outs.remove(0))
+    }
+}
+
+/// Whole-set block forward on the host (`model/hostfwd.rs`) — the
+/// reference path used when no engine is available or the device path
+/// persistently fails. `act_fakequant_rows` treats qmax >= 60000 as FP
+/// passthrough, matching the artifact's A16 sentinel.
+pub fn host_forward_all(
+    bw: &BlockView,
+    set: &CalibSet,
+    cfg: &ModelConfig,
+    qmax_act: f32,
+) -> Tensor {
+    let opts = BlockFwdOpts { act_qmax: Some(qmax_act), collect: false };
+    block_fwd(&set.x, bw, cfg, &opts).0
+}
+
+/// Forward backend with graceful degradation: the `block_fp_fwd` artifact
+/// when an engine is available (with bounded retries), the host-side
+/// reference forward otherwise — including when device execution fails
+/// persistently mid-run.
+pub struct ForwardBackend<'e> {
+    runner: Option<BlockRunner<'e>>,
+    pub cfg: ModelConfig,
+    retry: RetryPolicy,
+}
+
+impl<'e> ForwardBackend<'e> {
+    pub fn new(
+        eng: Option<&'e Engine>,
+        cfg: &ModelConfig,
+        size: &str,
+        retry: &RetryPolicy,
+    ) -> ForwardBackend<'e> {
+        let runner = eng.and_then(|e| {
+            match with_retry(retry, &format!("compiling block_fp_fwd.{size}"), || {
+                BlockRunner::new(e, size)
+            }) {
+                Ok(r) => Some(r),
+                Err(err) => {
+                    eprintln!(
+                        "[robust] block forward artifact unavailable; \
+                         using host-side reference forward: {err:#}"
+                    );
+                    None
+                }
+            }
+        });
+        ForwardBackend { runner, cfg: cfg.clone(), retry: *retry }
+    }
+
+    /// True when forwards run on the host fallback path.
+    pub fn is_host(&self) -> bool {
+        self.runner.is_none()
+    }
+
+    pub fn forward_all(&self, bw: &BlockView, set: &CalibSet, qmax_act: f32) -> Result<Tensor> {
+        if let Some(r) = &self.runner {
+            let what = format!("device forward ({})", r.art.name());
+            match with_retry(&self.retry, &what, || r.forward_all(bw, set, qmax_act)) {
+                Ok(y) => return Ok(y),
+                Err(e) => {
+                    eprintln!("[robust] {what} failed persistently; host-side reference forward: {e:#}")
+                }
+            }
+        }
+        Ok(host_forward_all(bw, set, &self.cfg, qmax_act))
     }
 }

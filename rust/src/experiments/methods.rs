@@ -8,8 +8,9 @@ use anyhow::Result;
 use crate::baselines::awq::{awq_transform, quantize_with_clips};
 use crate::baselines::gptq::gptq_linear;
 use crate::coordinator::lwc::{calibrate_lwc, LwcConfig};
-use crate::coordinator::par::{calibrate_tesseraq, CalibReport, TesseraqConfig};
+use crate::coordinator::par::{calibrate_tesseraq_robust, CalibReport, TesseraqConfig};
 use crate::coordinator::Schedule;
+use crate::robust::RobustConfig;
 use crate::data::Corpus;
 use crate::model::hostfwd::{block_fwd, tap_for_linear, BlockFwdOpts};
 use crate::model::Params;
@@ -74,6 +75,9 @@ pub struct MethodOpts {
     pub tesseraq: TesseraqConfig,
     pub lwc: LwcConfig,
     pub schedule: Schedule,
+    /// Resilience knobs (checkpointing, sentinels, retry, fault plan) for
+    /// the TesseraQ calibration arms.
+    pub robust: RobustConfig,
 }
 
 impl MethodOpts {
@@ -86,7 +90,14 @@ impl MethodOpts {
         t.propagate_act_quant = qcfg.act_bits.is_some();
         let mut l = if fast { LwcConfig::fast(qcfg) } else { LwcConfig::standard(qcfg) };
         l.propagate_act_quant = qcfg.act_bits.is_some();
-        MethodOpts { n_seq, seed: 0xCA11B, tesseraq: t, lwc: l, schedule: Schedule::Handcrafted }
+        MethodOpts {
+            n_seq,
+            seed: 0xCA11B,
+            tesseraq: t,
+            lwc: l,
+            schedule: Schedule::Handcrafted,
+            robust: RobustConfig::default(),
+        }
     }
 }
 
@@ -154,8 +165,9 @@ pub fn quantize(
             let res = awq_transform(&mut params, &calib_x(), qcfg, 16, 6);
             let mut tcfg = opts.tesseraq.clone();
             tcfg.schedule = opts.schedule;
-            report = Some(calibrate_tesseraq(
-                eng, &mut params, Some(&res.clips), &tokens, opts.n_seq, &tcfg,
+            report = Some(calibrate_tesseraq_robust(
+                Some(eng), &mut params, Some(&res.clips), &tokens, opts.n_seq, &tcfg,
+                &opts.robust,
             )?);
         }
         Method::TesseraQLwc => {
@@ -165,8 +177,9 @@ pub fn quantize(
             let lrep = calibrate_lwc(eng, &mut probe, &tokens, opts.n_seq, &opts.lwc)?;
             let mut tcfg = opts.tesseraq.clone();
             tcfg.schedule = opts.schedule;
-            report = Some(calibrate_tesseraq(
-                eng, &mut params, Some(&lrep.clips), &tokens, opts.n_seq, &tcfg,
+            report = Some(calibrate_tesseraq_robust(
+                Some(eng), &mut params, Some(&lrep.clips), &tokens, opts.n_seq, &tcfg,
+                &opts.robust,
             )?);
         }
         Method::GptqOnAwq => {
@@ -191,8 +204,8 @@ pub fn quantize(
             head_t = Some(rotate_model(&mut params, R0_SEED));
             let mut tcfg = opts.tesseraq.clone();
             tcfg.schedule = opts.schedule;
-            report = Some(calibrate_tesseraq(
-                eng, &mut params, None, &tokens, opts.n_seq, &tcfg,
+            report = Some(calibrate_tesseraq_robust(
+                Some(eng), &mut params, None, &tokens, opts.n_seq, &tcfg, &opts.robust,
             )?);
         }
     }

@@ -4,7 +4,7 @@
 //! PJRT), but the *shape* — method ordering, bit-width trends, crossover
 //! points — is the reproduction target.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use super::methods::{quantize, Method, MethodOpts, Quantized};
 use super::Ctx;
@@ -361,7 +361,8 @@ fn table7(ctx: &Ctx) -> Result<()> {
     for b in bits {
         let qcfg = QuantConfig::weight_only(b, GroupScheme::Group(128));
         let q = run_method(ctx, &base, Method::TesseraQ, &qcfg, &calib)?;
-        let report = q.report.as_ref().unwrap();
+        let report =
+            q.report.as_ref().context("TesseraQ run produced no calibration report")?;
         let mut row = vec![qcfg.label()];
         for name in crate::model::LINEAR_NAMES {
             let (mut flips, mut total) = (0usize, 0usize);
@@ -405,8 +406,9 @@ fn table8(ctx: &Ctx) -> Result<()> {
     for bits in [4u32, 2] {
         let qcfg = QuantConfig::weight_only(bits, GroupScheme::Group(128));
         let q = run_method(ctx, &base, Method::TesseraQ, &qcfg, &calib)?;
-        let report = q.report.as_ref().unwrap();
-        let packed = ServeModel::packed(&q.params, report, bits);
+        let report =
+            q.report.as_ref().context("TesseraQ run produced no calibration report")?;
+        let packed = ServeModel::packed(&q.params, report, bits)?;
         serve_rows(&packed, &qcfg.label(), "packed rust")?;
     }
     t.emit("table8_throughput")?;
@@ -580,10 +582,11 @@ fn figure4(ctx: &Ctx) -> Result<()> {
             let b = lw.get(s).map(|v| v.to_string()).unwrap_or_default();
             csv.push_str(&format!("{l},{s},{a},{b}\n"));
         }
+        // a fallback block has no soften losses; print NaN rather than panic
         t.row(vec![
             l.to_string(),
-            format!("{:.5}", tr.losses.last().unwrap()),
-            format!("{:.5}", lw.last().unwrap()),
+            format!("{:.5}", tr.losses.last().copied().unwrap_or(f32::NAN)),
+            format!("{:.5}", lw.last().copied().unwrap_or(f32::NAN)),
         ]);
     }
     std::fs::create_dir_all(crate::report::results_dir())?;

@@ -7,6 +7,15 @@
 //!   and runs the paper's calibration pipeline, baselines, evaluation
 //!   harness and quantized serving path. Python never runs at runtime.
 
+// The code favors explicit index loops where they mirror the paper's math
+// (and the Python reference); keep clippy focused on correctness lints.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::manual_memcpy,
+    clippy::type_complexity
+)]
+
 pub mod baselines;
 pub mod coordinator;
 pub mod data;
@@ -15,6 +24,7 @@ pub mod experiments;
 pub mod model;
 pub mod quant;
 pub mod report;
+pub mod robust;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;

@@ -22,6 +22,7 @@ use tesseraq::experiments::{tables, Ctx};
 use tesseraq::model::{ModelConfig, Params};
 use tesseraq::quant::{GroupScheme, QuantConfig};
 use tesseraq::report::results_dir;
+use tesseraq::robust::{FaultPlan, RobustConfig};
 use tesseraq::serve::ServeModel;
 use tesseraq::tensor::Pcg32;
 use tesseraq::Engine;
@@ -71,25 +72,6 @@ impl Args {
     }
 }
 
-/// Parse paper notation "W2A16g128" into a QuantConfig.
-fn parse_quant(s: &str) -> Result<QuantConfig> {
-    let s = s.to_uppercase();
-    let rest = s.strip_prefix('W').context("quant config must start with W")?;
-    let apos = rest.find('A').context("quant config needs A<bits>")?;
-    let w_bits: u32 = rest[..apos].parse()?;
-    let rest = &rest[apos + 1..];
-    let (a_str, g_str) = match rest.find('G') {
-        Some(g) => (&rest[..g], Some(&rest[g + 1..])),
-        None => (rest, None),
-    };
-    let a_bits: u32 = a_str.parse()?;
-    let scheme = match g_str {
-        Some(g) => GroupScheme::Group(g.parse()?),
-        None => GroupScheme::PerChannel,
-    };
-    Ok(QuantConfig::new(w_bits, scheme, if a_bits >= 16 { None } else { Some(a_bits) }))
-}
-
 fn parse_method(s: &str) -> Result<Method> {
     Ok(match s.to_lowercase().as_str() {
         "rtn" => Method::Rtn,
@@ -104,6 +86,27 @@ fn parse_method(s: &str) -> Result<Method> {
         "quarot-tesseraq" => Method::QuaRotTesseraQ,
         other => bail!("unknown method {other:?}"),
     })
+}
+
+/// Build the resilience config from `--checkpoint-dir`, `--resume` and
+/// `--inject-faults` (the latter also honours `TESSERAQ_FAULTS`).
+fn robust_opts(args: &Args) -> Result<RobustConfig> {
+    let mut robust = RobustConfig::default();
+    if let Some(dir) = args.flag("checkpoint-dir") {
+        robust.checkpoint_dir = Some(std::path::PathBuf::from(dir));
+    }
+    if args.flag("resume").is_some() {
+        robust.resume = true;
+        if robust.checkpoint_dir.is_none() {
+            bail!("--resume requires --checkpoint-dir");
+        }
+    }
+    if let Some(spec) = args.flag("inject-faults") {
+        let plan = FaultPlan::parse(spec)
+            .with_context(|| format!("parsing --inject-faults {spec:?}"))?;
+        robust.faults = Some(std::rc::Rc::new(plan));
+    }
+    Ok(robust)
 }
 
 fn main() -> Result<()> {
@@ -147,12 +150,20 @@ fn main() -> Result<()> {
 const HELP: &str = "repro — TesseraQ reproduction launcher
   pretrain  --size S --steps N [--corpus wiki|c4] [--out PATH]
   calibrate --size S --quant W2A16g128 [--method tesseraq] [--ckpt PATH]
+            [--checkpoint-dir DIR] [--resume] [--inject-faults SPEC]
   eval      --size S [--ckpt PATH] [--corpus wiki|c4]
   serve     --size S --bits 2|3|4 [--batch B] [--new N]
   table N   [--fast]        regenerate paper table N (1-12)
   figure N  [--fast]        regenerate paper figure N (2-4)
   all-tables [--fast]
-  e2e       [--fast]        full train -> quantize -> eval -> serve";
+  e2e       [--fast]        full train -> quantize -> eval -> serve
+
+resilience (calibrate):
+  --checkpoint-dir DIR   persist per-block calibration checkpoints to DIR
+  --resume               resume a partial run from --checkpoint-dir
+  --inject-faults SPEC   deterministic faults, e.g.
+                         'nan@0.3,compile@block_par_step:2,kill@1'
+                         (also honoured via TESSERAQ_FAULTS env var)";
 
 fn cmd_pretrain(args: &Args) -> Result<()> {
     let eng = Engine::from_default_dir()?;
@@ -180,7 +191,7 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
     println!(
         "done in {:.1}s (final loss {:.4}); saved {}",
         rep.wall_s,
-        rep.losses.last().unwrap(),
+        rep.losses.last().copied().unwrap_or(f32::NAN),
         out.display()
     );
     Ok(())
@@ -196,11 +207,12 @@ fn load_or_train(args: &Args, ctx: &Ctx, size: &str) -> Result<Params> {
 fn cmd_calibrate(args: &Args) -> Result<()> {
     let ctx = Ctx::new(args.fast())?;
     let size = args.size();
-    let qcfg = parse_quant(args.flag("quant").unwrap_or("W2A16g128"))?;
+    let qcfg = QuantConfig::parse(args.flag("quant").unwrap_or("W2A16g128"))?;
     let method = parse_method(args.flag("method").unwrap_or("tesseraq"))?;
     let base = load_or_train(args, &ctx, &size)?;
     let calib = ctx.corpus(args.corpus_kind(), &size)?;
-    let opts = MethodOpts::new(qcfg, ctx.n_calib(), ctx.fast);
+    let mut opts = MethodOpts::new(qcfg, ctx.n_calib(), ctx.fast);
+    opts.robust = robust_opts(args)?;
     println!("calibrating {size} with {} at {}", method.label(), qcfg.label());
     let t0 = std::time::Instant::now();
     let q = quantize(&ctx.eng, &base, method, &qcfg, &calib, &opts)?;
@@ -252,7 +264,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let qcfg = QuantConfig::weight_only(bits, GroupScheme::Group(128));
         let opts = MethodOpts::new(qcfg, ctx.n_calib(), ctx.fast);
         let q = quantize(&ctx.eng, &base, Method::TesseraQ, &qcfg, &calib, &opts)?;
-        ServeModel::packed(&q.params, q.report.as_ref().unwrap(), bits)
+        let report =
+            q.report.as_ref().context("TesseraQ quantize produced no calibration report")?;
+        ServeModel::packed(&q.params, report, bits)?
     };
     let prompts: Vec<Vec<i32>> = (0..batch).map(|i| calib.sample(16, i as u64)).collect();
     let (outs, stats) = model.generate(&prompts, max_new)?;
@@ -293,7 +307,9 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         lines.push(format!("| {} | {ppl:.3} | {:.1}s |", m.label(),
                            t0.elapsed().as_secs_f64()));
         if m == Method::TesseraQ {
-            let packed = ServeModel::packed(&q.params, q.report.as_ref().unwrap(), qcfg.w_bits);
+            let report =
+                q.report.as_ref().context("TesseraQ quantize produced no calibration report")?;
+            let packed = ServeModel::packed(&q.params, report, qcfg.w_bits)?;
             let prompts: Vec<Vec<i32>> = (0..4).map(|i| calib.sample(16, i as u64)).collect();
             let (_, stats) = packed.generate(&prompts, 32)?;
             println!(

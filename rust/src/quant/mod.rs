@@ -89,6 +89,37 @@ impl QuantConfig {
         };
         format!("W{}A{a}{g}", self.w_bits)
     }
+
+    /// Parse paper notation ("W2A16g128", case-insensitive) back into a
+    /// config — the inverse of [`QuantConfig::label`].
+    pub fn parse(s: &str) -> anyhow::Result<QuantConfig> {
+        use anyhow::Context;
+        let up = s.to_uppercase();
+        let rest = up
+            .strip_prefix('W')
+            .with_context(|| format!("quant config {s:?} must start with W"))?;
+        let apos = rest
+            .find('A')
+            .with_context(|| format!("quant config {s:?} needs A<bits>"))?;
+        let w_bits: u32 = rest[..apos]
+            .parse()
+            .with_context(|| format!("bad weight bits in {s:?}"))?;
+        let rest = &rest[apos + 1..];
+        let (a_str, g_str) = match rest.find('G') {
+            Some(g) => (&rest[..g], Some(&rest[g + 1..])),
+            None => (rest, None),
+        };
+        let a_bits: u32 = a_str
+            .parse()
+            .with_context(|| format!("bad act bits in {s:?}"))?;
+        let scheme = match g_str {
+            Some(g) => GroupScheme::Group(
+                g.parse().with_context(|| format!("bad group size in {s:?}"))?,
+            ),
+            None => GroupScheme::PerChannel,
+        };
+        Ok(QuantConfig::new(w_bits, scheme, if a_bits >= 16 { None } else { Some(a_bits) }))
+    }
 }
 
 /// jnp.round semantics: ties to even.
@@ -98,7 +129,7 @@ pub fn round_te(x: f32) -> f32 {
 }
 
 /// Per-group scale/zero-point, shapes [out, n_groups].
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct QParams {
     pub s: Tensor,
     pub z: Tensor,
@@ -431,5 +462,21 @@ mod tests {
         assert_eq!(GroupScheme::parse("g64").unwrap(), GroupScheme::Group(64));
         assert_eq!(GroupScheme::parse("pc").unwrap(), GroupScheme::PerChannel);
         assert!(GroupScheme::parse("x2").is_err());
+    }
+
+    #[test]
+    fn quant_config_parse_roundtrip() {
+        for s in ["W2A16g128", "W4A4", "W3A16g64", "W8A8g32"] {
+            let c = QuantConfig::parse(s).unwrap();
+            assert_eq!(c.label(), s, "roundtrip {s}");
+        }
+        assert_eq!(
+            QuantConfig::parse("w2a16G128").unwrap(),
+            QuantConfig::weight_only(2, GroupScheme::Group(128)),
+            "case-insensitive"
+        );
+        assert!(QuantConfig::parse("2A16").is_err());
+        assert!(QuantConfig::parse("W2").is_err());
+        assert!(QuantConfig::parse("WxAy").is_err());
     }
 }

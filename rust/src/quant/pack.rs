@@ -6,6 +6,8 @@
 //! [bits*j, bits*(j+1)) of its word (low bits first). bits=3 packs 10
 //! codes per word, wasting the top 2 bits.
 
+use anyhow::{bail, Result};
+
 use crate::model::hostfwd::LinearOp;
 use crate::quant::QParams;
 use crate::tensor::Tensor;
@@ -55,10 +57,23 @@ pub fn unpack_codes(words: &[u32], o: usize, i: usize, bits: u32) -> Vec<u16> {
 }
 
 impl PackedLinear {
-    pub fn from_codes(codes: &[u16], o: usize, i: usize, bits: u32, qp: QParams) -> Self {
-        assert!(codes.iter().all(|&c| (c as u32) < (1 << bits)), "code overflow");
+    pub fn from_codes(codes: &[u16], o: usize, i: usize, bits: u32, qp: QParams) -> Result<Self> {
+        if !(1..=16).contains(&bits) {
+            bail!("packed bits must be in 1..=16, got {bits}");
+        }
+        if codes.len() != o * i {
+            bail!("got {} codes for a [{o}, {i}] weight (want {})", codes.len(), o * i);
+        }
+        if let Some(pos) = codes.iter().position(|&c| (c as u32) >= (1 << bits)) {
+            bail!(
+                "code {} at [{}, {}] overflows {bits}-bit range",
+                codes[pos],
+                pos / i,
+                pos % i
+            );
+        }
         let (words, n_words) = pack_codes(codes, o, i, bits);
-        PackedLinear { bits, out_features: o, in_features: i, words, n_words, qp }
+        Ok(PackedLinear { bits, out_features: o, in_features: i, words, n_words, qp })
     }
 
     /// Dequantize to a dense f32 weight (testing / fallback).
@@ -159,7 +174,7 @@ mod tests {
             let qp = minmax_scale(&w, g, &ClipFactors::Uniform(1.0),
                                   &ClipFactors::Uniform(1.0), qmax);
             let codes = rtn_codes(&w, &qp, qmax);
-            let pl = PackedLinear::from_codes(&codes, o, i, bits, qp);
+            let pl = PackedLinear::from_codes(&codes, o, i, bits, qp).unwrap();
             let x = Tensor::randn(&[7, i], 1.0, &mut rng);
             let dense = pl.dequant_dense();
             let want = dense.matmul_bt(&x);
@@ -170,6 +185,46 @@ mod tests {
     }
 
     #[test]
+    fn dequant_roundtrip_tail_columns() {
+        // dequant(pack(codes)) must be bit-exact even when the input dim
+        // leaves a partial final word (and a partial final group)
+        let mut rng = Pcg32::seeded(3);
+        for bits in [2u32, 3, 4] {
+            for i in [31usize, 37, 61] {
+                let o = 4;
+                let g = 16.min(i);
+                let w = Tensor::randn(&[o, i], 1.0, &mut rng);
+                let qmax = (2u32.pow(bits) - 1) as f32;
+                let qp = minmax_scale(&w, g, &ClipFactors::Uniform(1.0),
+                                      &ClipFactors::Uniform(1.0), qmax);
+                let codes = rtn_codes(&w, &qp, qmax);
+                let want = crate::quant::dequant_codes(&codes, o, i, &qp);
+                let pl = PackedLinear::from_codes(&codes, o, i, bits, qp).unwrap();
+                let got = pl.dequant_dense();
+                assert_eq!(got.data, want.data, "bits={bits} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_codes_rejects_bad_input() {
+        let qp = QParams {
+            s: Tensor::new(vec![1, 1], vec![1.0]),
+            z: Tensor::new(vec![1, 1], vec![0.0]),
+            group: 4,
+        };
+        // overflowing code is named with its position
+        let err = PackedLinear::from_codes(&[0, 1, 4, 2], 1, 4, 2, qp.clone())
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("overflows"), "{msg}");
+        // wrong code count for the declared shape
+        assert!(PackedLinear::from_codes(&[0, 1, 2], 1, 4, 2, qp.clone()).is_err());
+        // nonsense bit width
+        assert!(PackedLinear::from_codes(&[0; 4], 1, 4, 0, qp).is_err());
+    }
+
+    #[test]
     fn weight_bytes_ratio() {
         let mut rng = Pcg32::seeded(2);
         let (o, i) = (256, 256);
@@ -177,7 +232,7 @@ mod tests {
         let qp = minmax_scale(&w, 128, &ClipFactors::Uniform(1.0),
                               &ClipFactors::Uniform(1.0), 3.0);
         let codes = rtn_codes(&w, &qp, 3.0);
-        let pl = PackedLinear::from_codes(&codes, o, i, 2, qp);
+        let pl = PackedLinear::from_codes(&codes, o, i, 2, qp).unwrap();
         let fp16_bytes = o * i * 2;
         let ratio = fp16_bytes as f64 / pl.weight_bytes() as f64;
         // 2-bit + per-128 scales: close to 8x smaller than fp16

@@ -1,0 +1,444 @@
+//! Per-block calibration checkpoints: versioned, checksummed, atomically
+//! written files that let a killed calibration run resume from the first
+//! incomplete block.
+//!
+//! One file per completed block (`block_0007.tsqb`):
+//!
+//! ```text
+//!   "TSQB" | version u32 | config fingerprint u64 | payload len u64
+//!   payload (codes + effective QParams + BlockTrace, little-endian)
+//!   crc32(payload) u32
+//! ```
+//!
+//! Atomicity: payload is staged to `.block_NNNN.tsqb.tmp` in the same
+//! directory, fsync'd, then renamed over the final name — a kill at any
+//! point leaves either no file or a complete one. The fingerprint hashes
+//! the calibration configuration (model, quant config, schedule, seed,
+//! calibration tokens); a mismatch means the checkpoint belongs to a
+//! different run and resume is refused for that and later blocks.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::par::{BlockStatus, BlockTrace};
+use crate::quant::QParams;
+use crate::tensor::Tensor;
+
+pub const MAGIC: &[u8; 4] = b"TSQB";
+pub const VERSION: u32 = 1;
+
+/// FNV-1a 64-bit — stable, dependency-free config fingerprint.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// CRC-32 (IEEE, reflected) — payload integrity check.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Everything needed to reconstruct one completed block: the final codes
+/// + effective dequant params (what `CalibReport.quantized[l]` holds) and
+/// the block's trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockCheckpoint {
+    pub trace: BlockTrace,
+    pub quantized: BTreeMap<String, (Vec<u16>, QParams)>,
+}
+
+pub struct CheckpointStore {
+    dir: PathBuf,
+    fingerprint: u64,
+}
+
+impl CheckpointStore {
+    pub fn new(dir: impl Into<PathBuf>, fingerprint: u64) -> Result<CheckpointStore> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        Ok(CheckpointStore { dir, fingerprint })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn block_path(&self, layer: usize) -> PathBuf {
+        self.dir.join(format!("block_{layer:04}.tsqb"))
+    }
+
+    /// Atomically persist one completed block.
+    pub fn save_block(&self, layer: usize, ckpt: &BlockCheckpoint) -> Result<()> {
+        let payload = encode_payload(ckpt);
+        let mut file = Vec::with_capacity(payload.len() + 28);
+        file.extend_from_slice(MAGIC);
+        file.extend_from_slice(&VERSION.to_le_bytes());
+        file.extend_from_slice(&self.fingerprint.to_le_bytes());
+        file.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        file.extend_from_slice(&payload);
+        file.extend_from_slice(&crc32(&payload).to_le_bytes());
+
+        let final_path = self.block_path(layer);
+        let tmp_path = self.dir.join(format!(".block_{layer:04}.tsqb.tmp"));
+        {
+            let mut f = std::fs::File::create(&tmp_path)
+                .with_context(|| format!("creating {}", tmp_path.display()))?;
+            f.write_all(&file)
+                .with_context(|| format!("writing {}", tmp_path.display()))?;
+            f.sync_all()
+                .with_context(|| format!("syncing {}", tmp_path.display()))?;
+        }
+        std::fs::rename(&tmp_path, &final_path).with_context(|| {
+            format!("renaming {} -> {}", tmp_path.display(), final_path.display())
+        })?;
+        Ok(())
+    }
+
+    /// Load and validate one block checkpoint. Errors distinguish missing
+    /// files, corruption, version skew, and config-fingerprint mismatch.
+    pub fn load_block(&self, layer: usize) -> Result<BlockCheckpoint> {
+        let path = self.block_path(layer);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        let mut r = Reader::new(&bytes);
+        let magic = r.take(4)?;
+        if magic != MAGIC {
+            bail!("{}: not a TSQB checkpoint", path.display());
+        }
+        let version = r.take_u32()?;
+        if version != VERSION {
+            bail!("{}: checkpoint version {version}, this build reads {VERSION}", path.display());
+        }
+        let fp = r.take_u64()?;
+        if fp != self.fingerprint {
+            bail!(
+                "{}: config fingerprint mismatch (checkpoint {fp:#018x}, run {:#018x}); \
+                 the calibration configuration changed since this checkpoint was written",
+                path.display(),
+                self.fingerprint
+            );
+        }
+        let plen = r.take_u64()? as usize;
+        let payload = r.take(plen)?.to_vec();
+        let stored_crc = r.take_u32()?;
+        let actual_crc = crc32(&payload);
+        if stored_crc != actual_crc {
+            bail!(
+                "{}: checksum mismatch (stored {stored_crc:#010x}, computed {actual_crc:#010x}); \
+                 checkpoint is corrupt",
+                path.display()
+            );
+        }
+        let ckpt = decode_payload(&payload)
+            .with_context(|| format!("decoding checkpoint {}", path.display()))?;
+        if ckpt.trace.layer != layer {
+            bail!(
+                "{}: contains block {} but was loaded as block {layer}",
+                path.display(),
+                ckpt.trace.layer
+            );
+        }
+        Ok(ckpt)
+    }
+
+    /// The contiguous prefix of valid block checkpoints, stopping (with a
+    /// warning) at the first missing, corrupt, or mismatched file. The
+    /// returned length is the block index to resume from.
+    pub fn load_prefix(&self, n_layers: usize) -> Vec<BlockCheckpoint> {
+        let mut out = Vec::new();
+        for l in 0..n_layers {
+            if !self.block_path(l).exists() {
+                break;
+            }
+            match self.load_block(l) {
+                Ok(c) => out.push(c),
+                Err(e) => {
+                    eprintln!("[robust] stopping resume scan at block {l}: {e:#}");
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Remove all checkpoint files (and stale temp files) in the store.
+    pub fn clear(&self) -> Result<()> {
+        for entry in std::fs::read_dir(&self.dir)
+            .with_context(|| format!("listing {}", self.dir.display()))?
+        {
+            let path = entry?.path();
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if name.ends_with(".tsqb") || name.ends_with(".tsqb.tmp") {
+                std::fs::remove_file(&path)
+                    .with_context(|| format!("removing {}", path.display()))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// -- payload encoding --------------------------------------------------------
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(b: &mut Vec<u8>, v: f32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    put_u32(b, s.len() as u32);
+    b.extend_from_slice(s.as_bytes());
+}
+
+fn encode_payload(ckpt: &BlockCheckpoint) -> Vec<u8> {
+    let mut b = Vec::new();
+    let t = &ckpt.trace;
+    put_u32(&mut b, t.layer as u32);
+    b.push(match t.status {
+        BlockStatus::Optimized => 0u8,
+        BlockStatus::RtnFallback => 1u8,
+    });
+    put_f32(&mut b, t.initial_loss);
+    put_u32(&mut b, t.losses.len() as u32);
+    for &l in &t.losses {
+        put_f32(&mut b, l);
+    }
+    put_u32(&mut b, t.flips.len() as u32);
+    for (name, &(flipped, total)) in &t.flips {
+        put_str(&mut b, name);
+        put_u64(&mut b, flipped as u64);
+        put_u64(&mut b, total as u64);
+    }
+    put_u32(&mut b, ckpt.quantized.len() as u32);
+    for (name, (codes, qp)) in &ckpt.quantized {
+        put_str(&mut b, name);
+        put_u64(&mut b, codes.len() as u64);
+        for &c in codes {
+            b.extend_from_slice(&c.to_le_bytes());
+        }
+        put_u32(&mut b, qp.group as u32);
+        put_u32(&mut b, qp.s.shape[0] as u32);
+        put_u32(&mut b, qp.s.shape[1] as u32);
+        for &v in &qp.s.data {
+            put_f32(&mut b, v);
+        }
+        for &v in &qp.z.data {
+            put_f32(&mut b, v);
+        }
+    }
+    b
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        Reader { bytes, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.bytes.len() {
+            bail!("truncated at offset {} (wanted {n} bytes of {})", self.pos, self.bytes.len());
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn take_u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn take_u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    fn take_f32(&mut self) -> Result<f32> {
+        let s = self.take(4)?;
+        Ok(f32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn take_u16(&mut self) -> Result<u16> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn take_str(&mut self) -> Result<String> {
+        let n = self.take_u32()? as usize;
+        if n > 1 << 16 {
+            bail!("string too long ({n})");
+        }
+        Ok(String::from_utf8(self.take(n)?.to_vec())?)
+    }
+}
+
+fn decode_payload(payload: &[u8]) -> Result<BlockCheckpoint> {
+    let mut r = Reader::new(payload);
+    let layer = r.take_u32()? as usize;
+    let status = match r.take(1)?[0] {
+        0 => BlockStatus::Optimized,
+        1 => BlockStatus::RtnFallback,
+        t => bail!("unknown block status tag {t}"),
+    };
+    let initial_loss = r.take_f32()?;
+    let n_losses = r.take_u32()? as usize;
+    let mut losses = Vec::with_capacity(n_losses);
+    for _ in 0..n_losses {
+        losses.push(r.take_f32()?);
+    }
+    let n_flips = r.take_u32()? as usize;
+    let mut flips = BTreeMap::new();
+    for _ in 0..n_flips {
+        let name = r.take_str()?;
+        let flipped = r.take_u64()? as usize;
+        let total = r.take_u64()? as usize;
+        flips.insert(name, (flipped, total));
+    }
+    let n_lin = r.take_u32()? as usize;
+    let mut quantized = BTreeMap::new();
+    for _ in 0..n_lin {
+        let name = r.take_str()?;
+        let n_codes = r.take_u64()? as usize;
+        let mut codes = Vec::with_capacity(n_codes);
+        for _ in 0..n_codes {
+            codes.push(r.take_u16()?);
+        }
+        let group = r.take_u32()? as usize;
+        let o = r.take_u32()? as usize;
+        let ng = r.take_u32()? as usize;
+        let mut s = Vec::with_capacity(o * ng);
+        for _ in 0..o * ng {
+            s.push(r.take_f32()?);
+        }
+        let mut z = Vec::with_capacity(o * ng);
+        for _ in 0..o * ng {
+            z.push(r.take_f32()?);
+        }
+        let qp = QParams {
+            s: Tensor::new(vec![o, ng], s),
+            z: Tensor::new(vec![o, ng], z),
+            group,
+        };
+        quantized.insert(name, (codes, qp));
+    }
+    Ok(BlockCheckpoint {
+        trace: BlockTrace { layer, losses, flips, initial_loss, status },
+        quantized,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("tsqb_{}_{name}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    fn mk_ckpt(layer: usize) -> BlockCheckpoint {
+        let mut flips = BTreeMap::new();
+        flips.insert("q_proj".to_string(), (3usize, 64usize));
+        flips.insert("down_proj".to_string(), (0usize, 128usize));
+        let mut quantized = BTreeMap::new();
+        for (i, name) in ["q_proj", "down_proj"].iter().enumerate() {
+            let codes: Vec<u16> = (0..24).map(|c| ((c + i) % 4) as u16).collect();
+            let qp = QParams {
+                s: Tensor::from_fn(&[4, 2], |j| 0.01 + j as f32 * 0.003),
+                z: Tensor::from_fn(&[4, 2], |j| (j % 3) as f32),
+                group: 3,
+            };
+            quantized.insert(name.to_string(), (codes, qp));
+        }
+        BlockCheckpoint {
+            trace: BlockTrace {
+                layer,
+                losses: vec![0.5, 0.25, 0.125],
+                flips,
+                initial_loss: 0.75,
+                status: BlockStatus::Optimized,
+            },
+            quantized,
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let store = CheckpointStore::new(test_dir("roundtrip"), 0xDEAD_BEEF).unwrap();
+        let ckpt = mk_ckpt(0);
+        store.save_block(0, &ckpt).unwrap();
+        let back = store.load_block(0).unwrap();
+        assert_eq!(ckpt, back);
+        store.clear().unwrap();
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let store = CheckpointStore::new(test_dir("corrupt"), 1).unwrap();
+        store.save_block(0, &mk_ckpt(0)).unwrap();
+        let path = store.block_path(0);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", store.load_block(0).unwrap_err());
+        assert!(err.contains("checksum") || err.contains("decoding"), "{err}");
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_refused() {
+        let dir = test_dir("fingerprint");
+        let store = CheckpointStore::new(&dir, 42).unwrap();
+        store.save_block(0, &mk_ckpt(0)).unwrap();
+        let other = CheckpointStore::new(&dir, 43).unwrap();
+        let err = format!("{:#}", other.load_block(0).unwrap_err());
+        assert!(err.contains("fingerprint mismatch"), "{err}");
+        // and the resume scan treats it as "nothing to resume"
+        assert!(other.load_prefix(4).is_empty());
+    }
+
+    #[test]
+    fn prefix_stops_at_first_gap() {
+        let store = CheckpointStore::new(test_dir("prefix"), 7).unwrap();
+        store.save_block(0, &mk_ckpt(0)).unwrap();
+        store.save_block(2, &mk_ckpt(2)).unwrap();
+        let prefix = store.load_prefix(4);
+        assert_eq!(prefix.len(), 1);
+        assert_eq!(prefix[0].trace.layer, 0);
+    }
+
+    #[test]
+    fn hash_functions_match_known_vectors() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+}

@@ -1,0 +1,210 @@
+//! Deterministic fault injection for resilience testing.
+//!
+//! A `FaultPlan` is a list of injection sites parsed from a compact spec
+//! string (CLI `--inject-faults` or the `TESSERAQ_FAULTS` env var):
+//!
+//! ```text
+//!   nan@<block>.<step>        NaN loss at soften step <step> (1-based,
+//!                             global within the block) of block <block>
+//!   compile@<substr>[:<n>]    fail artifact compiles whose name contains
+//!                             <substr>; <n> times (default: persistent)
+//!   exec@<substr>[:<n>]       same for artifact execution
+//!   kill@<block>              simulated crash right after block <block>'s
+//!                             checkpoint is persisted
+//! ```
+//!
+//! Entries are comma-separated, e.g.
+//! `nan@0.3,compile@block_par_step:2,kill@1`. Counters live in `Cell`s so
+//! a shared `Rc<FaultPlan>` can be consulted from both the engine and the
+//! calibration loop.
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    NanLoss,
+    CompileFail,
+    ExecFail,
+    Kill,
+}
+
+#[derive(Debug)]
+struct Site {
+    kind: Kind,
+    /// Block index for NanLoss/Kill.
+    block: usize,
+    /// 1-based soften step for NanLoss.
+    step: usize,
+    /// Artifact-name substring for CompileFail/ExecFail.
+    name: String,
+    /// Remaining firings; `None` = persistent (never exhausted).
+    remaining: Cell<Option<u32>>,
+}
+
+impl Site {
+    fn take(&self) -> bool {
+        match self.remaining.get() {
+            None => true,
+            Some(0) => false,
+            Some(n) => {
+                self.remaining.set(Some(n - 1));
+                true
+            }
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    sites: Vec<Site>,
+}
+
+impl FaultPlan {
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut sites = Vec::new();
+        for raw in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (kind_s, rest) = raw
+                .split_once('@')
+                .with_context(|| format!("fault entry {raw:?}: expected <kind>@<site>"))?;
+            let site = match kind_s {
+                "nan" => {
+                    let (b, s) = rest.split_once('.').with_context(|| {
+                        format!("fault entry {raw:?}: nan wants <block>.<step>")
+                    })?;
+                    Site {
+                        kind: Kind::NanLoss,
+                        block: b.parse().with_context(|| format!("bad block in {raw:?}"))?,
+                        step: s.parse().with_context(|| format!("bad step in {raw:?}"))?,
+                        name: String::new(),
+                        remaining: Cell::new(Some(1)),
+                    }
+                }
+                "compile" | "exec" => {
+                    let (name, remaining) = match rest.rsplit_once(':') {
+                        Some((n, cnt)) => {
+                            let c: u32 = cnt
+                                .parse()
+                                .with_context(|| format!("bad count in {raw:?}"))?;
+                            (n.to_string(), Some(c))
+                        }
+                        None => (rest.to_string(), None),
+                    };
+                    if name.is_empty() {
+                        bail!("fault entry {raw:?}: empty artifact pattern");
+                    }
+                    Site {
+                        kind: if kind_s == "compile" { Kind::CompileFail } else { Kind::ExecFail },
+                        block: 0,
+                        step: 0,
+                        name,
+                        remaining: Cell::new(remaining),
+                    }
+                }
+                "kill" => Site {
+                    kind: Kind::Kill,
+                    block: rest.parse().with_context(|| format!("bad block in {raw:?}"))?,
+                    step: 0,
+                    name: String::new(),
+                    remaining: Cell::new(Some(1)),
+                },
+                other => bail!("unknown fault kind {other:?} in {raw:?} (want nan|compile|exec|kill)"),
+            };
+            sites.push(site);
+        }
+        if sites.is_empty() {
+            bail!("empty fault spec");
+        }
+        Ok(FaultPlan { sites })
+    }
+
+    /// Plan from `TESSERAQ_FAULTS`, if set. A malformed spec is a hard
+    /// error on stderr but is otherwise ignored (never poison startup).
+    pub fn from_env() -> Option<Rc<FaultPlan>> {
+        let spec = std::env::var("TESSERAQ_FAULTS").ok()?;
+        match FaultPlan::parse(&spec) {
+            Ok(p) => Some(Rc::new(p)),
+            Err(e) => {
+                eprintln!("[robust] ignoring malformed TESSERAQ_FAULTS={spec:?}: {e:#}");
+                None
+            }
+        }
+    }
+
+    fn fire(&self, kind: Kind, block: usize, step: usize, name: &str) -> bool {
+        self.sites.iter().any(|s| {
+            s.kind == kind
+                && match kind {
+                    Kind::NanLoss => s.block == block && s.step == step,
+                    Kind::Kill => s.block == block,
+                    Kind::CompileFail | Kind::ExecFail => name.contains(&s.name),
+                }
+                && s.take()
+        })
+    }
+
+    /// Should the soften loss of (block, 1-based step) be corrupted to NaN?
+    pub fn nan_loss(&self, block: usize, step: usize) -> bool {
+        self.fire(Kind::NanLoss, block, step, "")
+    }
+
+    /// Injected compile failure for this artifact name, if scheduled.
+    pub fn fail_compile(&self, name: &str) -> Option<anyhow::Error> {
+        self.fire(Kind::CompileFail, 0, 0, name)
+            .then(|| anyhow::anyhow!("injected compile failure for {name:?}"))
+    }
+
+    /// Injected execute failure for this artifact name, if scheduled.
+    pub fn fail_exec(&self, name: &str) -> Option<anyhow::Error> {
+        self.fire(Kind::ExecFail, 0, 0, name)
+            .then(|| anyhow::anyhow!("injected exec failure for {name:?}"))
+    }
+
+    /// Simulated crash after `block`'s checkpoint was persisted.
+    pub fn kill_after_block(&self, block: usize) -> bool {
+        self.fire(Kind::Kill, block, 0, "")
+    }
+}
+
+/// Error message marker for simulated mid-run kills; tests match on it.
+pub const KILL_MARKER: &str = "simulated crash (fault injection)";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_grammar() {
+        let p = FaultPlan::parse("nan@0.3, compile@block_par_step:2, exec@fwd, kill@1").unwrap();
+        assert_eq!(p.sites.len(), 4);
+        // nan fires exactly once at the right site
+        assert!(!p.nan_loss(0, 2));
+        assert!(!p.nan_loss(1, 3));
+        assert!(p.nan_loss(0, 3));
+        assert!(!p.nan_loss(0, 3), "nan site must be one-shot");
+        // compile fails twice then recovers
+        assert!(p.fail_compile("block_par_step.nano.g32").is_some());
+        assert!(p.fail_compile("block_par_step.nano.g32").is_some());
+        assert!(p.fail_compile("block_par_step.nano.g32").is_none());
+        assert!(p.fail_compile("unrelated").is_none());
+        // exec is persistent
+        for _ in 0..5 {
+            assert!(p.fail_exec("block_fp_fwd.nano").is_some());
+        }
+        // kill fires once
+        assert!(!p.kill_after_block(0));
+        assert!(p.kill_after_block(1));
+        assert!(!p.kill_after_block(1));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(FaultPlan::parse("").is_err());
+        assert!(FaultPlan::parse("nan@x.y").is_err());
+        assert!(FaultPlan::parse("explode@0").is_err());
+        assert!(FaultPlan::parse("compile@:3").is_err());
+        assert!(FaultPlan::parse("nan@3").is_err());
+    }
+}

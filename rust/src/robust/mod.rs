@@ -1,0 +1,75 @@
+//! Resilience layer for long calibration runs (robustness tentpole).
+//!
+//! Four cooperating pieces:
+//!
+//! * [`checkpoint`] — per-block, checksummed, atomically-written calibration
+//!   checkpoints; a killed run resumes from the first incomplete block.
+//! * [`sentinel`] — NaN/Inf/divergence detection in the soften loop with a
+//!   rollback + learning-rate-backoff retry budget, then hardened-RTN
+//!   fallback for the block.
+//! * [`retry`] — bounded exponential-backoff retry for transient runtime
+//!   faults (artifact compile/execute).
+//! * [`fault`] — deterministic fault injection (`--inject-faults` /
+//!   `TESSERAQ_FAULTS`) used by the integration harness to prove the
+//!   recovery paths work.
+
+pub mod checkpoint;
+pub mod fault;
+pub mod retry;
+pub mod sentinel;
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+pub use checkpoint::{BlockCheckpoint, CheckpointStore};
+pub use fault::{FaultPlan, KILL_MARKER};
+pub use retry::{with_retry, RetryPolicy};
+pub use sentinel::{LossHealth, Sentinel, SentinelConfig};
+
+/// Knobs for a fault-tolerant calibration run. `Default` enables the
+/// sentinels and runtime retries but no checkpointing (opt-in via
+/// `checkpoint_dir`) and no fault injection.
+#[derive(Clone, Default)]
+pub struct RobustConfig {
+    /// Where to persist per-block checkpoints; `None` disables them.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Resume from a valid checkpoint prefix instead of starting fresh.
+    pub resume: bool,
+    pub sentinel: SentinelConfig,
+    pub retry: RetryPolicy,
+    /// Deterministic fault injection (tests / drills); `None` in production.
+    pub faults: Option<Rc<FaultPlan>>,
+}
+
+impl std::fmt::Debug for RobustConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RobustConfig")
+            .field("checkpoint_dir", &self.checkpoint_dir)
+            .field("resume", &self.resume)
+            .field("sentinel", &self.sentinel)
+            .field("retry", &self.retry)
+            .field("faults", &self.faults.is_some())
+            .finish()
+    }
+}
+
+impl RobustConfig {
+    /// Everything off — bit-for-bit the pre-resilience behavior.
+    pub fn disabled() -> Self {
+        RobustConfig {
+            checkpoint_dir: None,
+            resume: false,
+            sentinel: SentinelConfig::disabled(),
+            retry: RetryPolicy::none(),
+            faults: None,
+        }
+    }
+
+    pub fn with_checkpoints(dir: impl Into<PathBuf>, resume: bool) -> Self {
+        RobustConfig {
+            checkpoint_dir: Some(dir.into()),
+            resume,
+            ..Default::default()
+        }
+    }
+}

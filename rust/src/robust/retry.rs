@@ -1,0 +1,116 @@
+//! Bounded retry with exponential backoff for transient runtime faults
+//! (artifact compile, device execute, checkpoint I/O).
+
+use anyhow::{Context, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (1 = no retry).
+    pub max_attempts: u32,
+    pub base_delay_ms: u64,
+    pub max_delay_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 3, base_delay_ms: 10, max_delay_ms: 200 }
+    }
+}
+
+impl RetryPolicy {
+    /// No retries at all — fail on the first error.
+    pub fn none() -> Self {
+        RetryPolicy { max_attempts: 1, base_delay_ms: 0, max_delay_ms: 0 }
+    }
+
+    /// Retry without sleeping (tests).
+    pub fn immediate(max_attempts: u32) -> Self {
+        RetryPolicy { max_attempts, base_delay_ms: 0, max_delay_ms: 0 }
+    }
+
+    /// Backoff delay before attempt `attempt + 1` (0-indexed failures).
+    pub fn delay_ms(&self, failures: u32) -> u64 {
+        if self.base_delay_ms == 0 {
+            return 0;
+        }
+        let shift = failures.min(16);
+        (self.base_delay_ms.saturating_mul(1u64 << shift)).min(self.max_delay_ms)
+    }
+}
+
+/// Run `f` under the policy. Failed attempts are logged to stderr with the
+/// attempt count; the final error carries a "giving up" context.
+pub fn with_retry<T>(
+    policy: &RetryPolicy,
+    what: &str,
+    mut f: impl FnMut() -> Result<T>,
+) -> Result<T> {
+    let attempts = policy.max_attempts.max(1);
+    let mut last_err = None;
+    for attempt in 1..=attempts {
+        match f() {
+            Ok(v) => {
+                if attempt > 1 {
+                    eprintln!("[robust] {what}: recovered on attempt {attempt}/{attempts}");
+                }
+                return Ok(v);
+            }
+            Err(e) => {
+                eprintln!("[robust] {what} failed (attempt {attempt}/{attempts}): {e:#}");
+                last_err = Some(e);
+                if attempt < attempts {
+                    let d = policy.delay_ms(attempt - 1);
+                    if d > 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(d));
+                    }
+                }
+            }
+        }
+    }
+    Err(last_err.unwrap_or_else(|| anyhow::anyhow!("{what}: no attempts ran")))
+        .with_context(|| format!("{what}: giving up after {attempts} attempts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::Cell;
+
+    #[test]
+    fn succeeds_after_transient_failures() {
+        let calls = Cell::new(0u32);
+        let out = with_retry(&RetryPolicy::immediate(3), "flaky", || {
+            calls.set(calls.get() + 1);
+            if calls.get() < 3 {
+                anyhow::bail!("transient");
+            }
+            Ok(42)
+        });
+        assert_eq!(out.unwrap(), 42);
+        assert_eq!(calls.get(), 3);
+    }
+
+    #[test]
+    fn gives_up_after_max_attempts() {
+        let calls = Cell::new(0u32);
+        let out: anyhow::Result<()> = with_retry(&RetryPolicy::immediate(4), "doomed", || {
+            calls.set(calls.get() + 1);
+            anyhow::bail!("persistent")
+        });
+        let err = format!("{:#}", out.unwrap_err());
+        assert_eq!(calls.get(), 4);
+        assert!(err.contains("giving up after 4 attempts"), "{err}");
+        assert!(err.contains("persistent"), "{err}");
+    }
+
+    #[test]
+    fn delays_are_bounded() {
+        let p = RetryPolicy { max_attempts: 10, base_delay_ms: 10, max_delay_ms: 80 };
+        assert_eq!(p.delay_ms(0), 10);
+        assert_eq!(p.delay_ms(1), 20);
+        assert_eq!(p.delay_ms(2), 40);
+        assert_eq!(p.delay_ms(3), 80);
+        assert_eq!(p.delay_ms(9), 80);
+        assert_eq!(RetryPolicy::immediate(3).delay_ms(5), 0);
+    }
+}

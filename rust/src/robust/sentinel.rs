@@ -1,0 +1,157 @@
+//! Numerical sentinels for the soften loop: detect NaN/Inf losses and
+//! runaway divergence, and account for the rollback/retry budget.
+//!
+//! The sentinel itself is engine-agnostic — it only sees the per-step
+//! reconstruction loss. The calibration loop owns the actual rollback
+//! (restoring nu/v/Adam snapshots); `Sentinel` decides *when* to roll
+//! back and what learning-rate scale to retry with.
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SentinelConfig {
+    pub enabled: bool,
+    /// Rollback/retry budget per block before falling back to RTN.
+    pub max_retries: u32,
+    /// Learning-rate multiplier applied on each retry (compounding).
+    pub lr_backoff: f32,
+    /// A finite loss above `divergence_factor * best_loss_so_far` counts
+    /// as divergence.
+    pub divergence_factor: f32,
+}
+
+impl Default for SentinelConfig {
+    fn default() -> Self {
+        SentinelConfig {
+            enabled: true,
+            max_retries: 2,
+            lr_backoff: 0.5,
+            divergence_factor: 1e4,
+        }
+    }
+}
+
+impl SentinelConfig {
+    pub fn disabled() -> Self {
+        SentinelConfig { enabled: false, ..Default::default() }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LossHealth {
+    Ok,
+    NonFinite,
+    /// Finite but exploded relative to the block's best loss.
+    Diverged { baseline: f32 },
+}
+
+impl LossHealth {
+    pub fn is_ok(&self) -> bool {
+        matches!(self, LossHealth::Ok)
+    }
+}
+
+/// Per-block sentinel state. Create one per block; `lr_scale` persists
+/// across retries so a backed-off learning rate stays backed off.
+#[derive(Debug)]
+pub struct Sentinel {
+    cfg: SentinelConfig,
+    /// Best (lowest) healthy loss seen so far; NAN until the first one.
+    best: f32,
+    retries_used: u32,
+    pub lr_scale: f32,
+}
+
+impl Sentinel {
+    pub fn new(cfg: SentinelConfig) -> Sentinel {
+        Sentinel { cfg, best: f32::NAN, retries_used: 0, lr_scale: 1.0 }
+    }
+
+    /// Classify one step's loss. Healthy losses tighten the divergence
+    /// baseline; unhealthy ones leave all state untouched (the caller
+    /// decides whether to `trip`).
+    pub fn observe(&mut self, loss: f32) -> LossHealth {
+        if !self.cfg.enabled {
+            return LossHealth::Ok;
+        }
+        if !loss.is_finite() {
+            return LossHealth::NonFinite;
+        }
+        if !self.best.is_nan() {
+            let baseline = self.best.max(f32::MIN_POSITIVE);
+            if loss > self.cfg.divergence_factor * baseline {
+                return LossHealth::Diverged { baseline };
+            }
+        }
+        if self.best.is_nan() || loss < self.best {
+            self.best = loss;
+        }
+        LossHealth::Ok
+    }
+
+    /// Consume one retry. Returns the new lr scale to retry with, or
+    /// `None` when the budget is exhausted (caller falls back to RTN).
+    pub fn trip(&mut self) -> Option<f32> {
+        if self.retries_used >= self.cfg.max_retries {
+            return None;
+        }
+        self.retries_used += 1;
+        self.lr_scale *= self.cfg.lr_backoff;
+        Some(self.lr_scale)
+    }
+
+    pub fn retries_used(&self) -> u32 {
+        self.retries_used
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_non_finite() {
+        let mut s = Sentinel::new(SentinelConfig::default());
+        assert_eq!(s.observe(1.0), LossHealth::Ok);
+        assert_eq!(s.observe(f32::NAN), LossHealth::NonFinite);
+        assert_eq!(s.observe(f32::INFINITY), LossHealth::NonFinite);
+        // healthy state was not poisoned by the bad observations
+        assert_eq!(s.observe(0.5), LossHealth::Ok);
+    }
+
+    #[test]
+    fn flags_divergence_against_best() {
+        let mut s = Sentinel::new(SentinelConfig {
+            divergence_factor: 100.0,
+            ..Default::default()
+        });
+        // no baseline yet: any finite first loss is accepted
+        assert_eq!(s.observe(1e30), LossHealth::Ok);
+        assert_eq!(s.observe(0.01), LossHealth::Ok);
+        match s.observe(2.0) {
+            LossHealth::Diverged { baseline } => assert!((baseline - 0.01).abs() < 1e-9),
+            h => panic!("expected divergence, got {h:?}"),
+        }
+        // just under the factor is fine
+        assert_eq!(s.observe(0.9), LossHealth::Ok);
+    }
+
+    #[test]
+    fn retry_budget_and_backoff() {
+        let mut s = Sentinel::new(SentinelConfig {
+            max_retries: 2,
+            lr_backoff: 0.5,
+            ..Default::default()
+        });
+        assert_eq!(s.trip(), Some(0.5));
+        assert_eq!(s.trip(), Some(0.25));
+        assert_eq!(s.trip(), None);
+        assert_eq!(s.retries_used(), 2);
+        assert!((s.lr_scale - 0.25).abs() < 1e-9, "scale persists after exhaustion");
+    }
+
+    #[test]
+    fn disabled_sentinel_accepts_anything() {
+        let mut s = Sentinel::new(SentinelConfig::disabled());
+        assert_eq!(s.observe(f32::NAN), LossHealth::Ok);
+        assert_eq!(s.observe(f32::INFINITY), LossHealth::Ok);
+    }
+}

@@ -5,7 +5,7 @@
 //! Decoded with the in-tree JSON parser (offline environment, no serde).
 
 use std::collections::HashMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
@@ -16,6 +16,9 @@ pub struct Manifest {
     pub artifacts: Vec<ArtifactSpec>,
     pub param_names: Vec<String>,
     pub linear_names: Vec<String>,
+    /// Directory the manifest was loaded from (None when parsed from a
+    /// string); used to point lookup errors at the searched location.
+    pub dir: Option<PathBuf>,
 }
 
 #[derive(Debug, Clone)]
@@ -72,7 +75,10 @@ impl Manifest {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
-        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+        let mut m =
+            Self::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        m.dir = Some(dir.to_path_buf());
+        Ok(m)
     }
 
     pub fn parse(text: &str) -> Result<Self> {
@@ -87,13 +93,18 @@ impl Manifest {
             artifacts,
             param_names: strings(j.get("param_names")?)?,
             linear_names: strings(j.get("linear_names")?)?,
+            dir: None,
         })
     }
 
     pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts.iter().find(|a| a.name == name).with_context(|| {
             let known: Vec<_> = self.artifacts.iter().map(|a| a.name.as_str()).collect();
-            format!("artifact {name:?} not in manifest; known: {known:?}")
+            let whence = match &self.dir {
+                Some(d) => format!(" (searched {})", d.display()),
+                None => String::new(),
+            };
+            format!("artifact {name:?} not in manifest{whence}; known: {known:?}")
         })
     }
 
@@ -223,5 +234,14 @@ mod tests {
         let m = Manifest::parse(SAMPLE).unwrap();
         let err = format!("{:#}", m.get("missing").unwrap_err());
         assert!(err.contains("block_fp_fwd.nano"));
+    }
+
+    #[test]
+    fn unknown_artifact_names_searched_dir() {
+        let mut m = Manifest::parse(SAMPLE).unwrap();
+        m.dir = Some(PathBuf::from("/some/artifacts"));
+        let err = format!("{:#}", m.get("missing").unwrap_err());
+        assert!(err.contains("/some/artifacts"), "{err}");
+        assert!(err.contains("block_fp_fwd.nano"), "{err}");
     }
 }

@@ -18,6 +18,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::robust::FaultPlan;
 use crate::tensor::Tensor;
 pub use manifest::{ArtifactSpec, Manifest, Meta, ModelMeta};
 
@@ -35,6 +36,8 @@ pub struct Engine {
     cache: RefCell<HashMap<String, Rc<Artifact>>>,
     /// Cumulative (compile_ms, exec_calls) for profiling.
     pub stats: RefCell<EngineStats>,
+    /// Deterministic fault injection (tests / resilience drills).
+    faults: RefCell<Option<Rc<FaultPlan>>>,
 }
 
 #[derive(Default, Debug, Clone)]
@@ -60,7 +63,15 @@ impl Engine {
             manifest,
             cache: RefCell::new(HashMap::new()),
             stats: RefCell::new(EngineStats::default()),
+            faults: RefCell::new(FaultPlan::from_env()),
         })
+    }
+
+    /// Install (or clear) a fault-injection plan for this engine's
+    /// compile/execute paths. `Engine::new` picks one up automatically
+    /// from `TESSERAQ_FAULTS`.
+    pub fn set_fault_plan(&self, plan: Option<Rc<FaultPlan>>) {
+        *self.faults.borrow_mut() = plan;
     }
 
     pub fn from_default_dir() -> Result<Self> {
@@ -71,6 +82,11 @@ impl Engine {
     pub fn artifact(&self, name: &str) -> Result<Rc<Artifact>> {
         if let Some(a) = self.cache.borrow().get(name) {
             return Ok(a.clone());
+        }
+        if let Some(plan) = self.faults.borrow().as_ref() {
+            if let Some(e) = plan.fail_compile(name) {
+                return Err(e);
+            }
         }
         let spec = self.manifest.get(name)?.clone();
         let path = self.dir.join(&spec.path);
@@ -161,6 +177,11 @@ impl Engine {
         bufs: &[L],
     ) -> Result<Vec<Tensor>> {
         self.stats.borrow_mut().exec_calls += 1;
+        if let Some(plan) = self.faults.borrow().as_ref() {
+            if let Some(e) = plan.fail_exec(&art.spec.name) {
+                return Err(e);
+            }
+        }
         let outs = art.exe.execute_b(bufs).with_context(|| format!("executing {}", art.spec.name))?;
         let lit = outs[0][0]
             .to_literal_sync()

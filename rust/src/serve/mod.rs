@@ -5,7 +5,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::par::CalibReport;
 use crate::model::hostfwd::{rmsnorm_rows, silu, LinearOp};
@@ -53,31 +53,40 @@ impl ServeModel {
     }
 
     /// Packed model from a TesseraQ calibration report (codes + effective
-    /// scales). Embedding and norms stay dense, like the paper.
-    pub fn packed(params: &Params, report: &CalibReport, bits: u32) -> ServeModel {
+    /// scales). Embedding and norms stay dense, like the paper. Fails with
+    /// context if the report is missing blocks/linears (e.g. built from a
+    /// partial calibration) or if codes overflow `bits`.
+    pub fn packed(params: &Params, report: &CalibReport, bits: u32) -> Result<ServeModel> {
         let cfg = params.cfg.clone();
-        let blocks = (0..cfg.n_layers)
-            .map(|l| {
-                let bv = params.block(l);
-                let linears: BTreeMap<String, Box<dyn LinearOp>> = LINEAR_NAMES
-                    .iter()
-                    .map(|name| {
-                        let (codes, qp) = &report.quantized[l][*name];
-                        let (o, i) = cfg.linear_shape(name);
-                        let pl = PackedLinear::from_codes(codes, o, i, bits, qp.clone());
-                        (name.to_string(), Box::new(pl) as Box<dyn LinearOp>)
-                    })
-                    .collect();
-                ServeBlock { linears, norm1: bv.norm1, norm2: bv.norm2 }
-            })
-            .collect();
-        ServeModel {
+        if report.quantized.len() < cfg.n_layers {
+            bail!(
+                "calibration report covers {} blocks, model has {} — partial run?",
+                report.quantized.len(),
+                cfg.n_layers
+            );
+        }
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let bv = params.block(l);
+            let mut linears: BTreeMap<String, Box<dyn LinearOp>> = BTreeMap::new();
+            for name in LINEAR_NAMES {
+                let (codes, qp) = report.quantized[l].get(name).with_context(|| {
+                    format!("calibration report block {l} has no codes for {name:?}")
+                })?;
+                let (o, i) = cfg.linear_shape(name);
+                let pl = PackedLinear::from_codes(codes, o, i, bits, qp.clone())
+                    .with_context(|| format!("packing block {l} {name}"))?;
+                linears.insert(name.to_string(), Box::new(pl) as Box<dyn LinearOp>);
+            }
+            blocks.push(ServeBlock { linears, norm1: bv.norm1, norm2: bv.norm2 });
+        }
+        Ok(ServeModel {
             cfg: cfg.clone(),
             emb: params.get("emb").clone(),
             norm_f: params.get("norm_f").clone(),
             blocks,
             label: format!("W{bits} packed"),
-        }
+        })
     }
 
     /// Weight memory in bytes (Table 8 "WM" column; FP16 reference for
@@ -230,11 +239,13 @@ impl ServeModel {
         (0..b)
             .map(|r| {
                 let row = &logits.data[r * v..(r + 1) * v];
+                // total_cmp: NaN logits (e.g. a degenerate quantized model)
+                // must not panic the decode loop
                 row.iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap()
-                    .0 as i32
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i as i32)
+                    .unwrap_or(0)
             })
             .collect()
     }
@@ -246,6 +257,21 @@ impl ServeModel {
         max_new: usize,
     ) -> Result<(Vec<Vec<i32>>, DecodeStats)> {
         let b = prompts.len();
+        if b == 0 {
+            bail!("generate: empty prompt batch");
+        }
+        for (r, p) in prompts.iter().enumerate() {
+            if p.is_empty() {
+                bail!("generate: prompt {r} is empty");
+            }
+            if let Some(&t) = p.iter().find(|&&t| t < 0 || t as usize >= self.cfg.vocab_size)
+            {
+                bail!(
+                    "generate: prompt {r} token {t} out of range (vocab {})",
+                    self.cfg.vocab_size
+                );
+            }
+        }
         let plen = prompts.iter().map(|p| p.len()).max().unwrap_or(0);
         let mut cache = KvCache::new(&self.cfg, b);
         // prefill token-by-token (decode-path benchmark, like TP_n in the

@@ -65,7 +65,7 @@ impl Bench {
                 break;
             }
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(|a, b| a.total_cmp(b));
         let mean = samples.iter().sum::<f64>() / samples.len() as f64;
         let rec = Record {
             label: label.to_string(),

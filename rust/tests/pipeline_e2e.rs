@@ -62,7 +62,7 @@ fn e2e_packed_serving_matches_fakequant_eval() {
     // packed weights must dequantize exactly to the merged fake-quant
     // weights the evaluator saw
     let report = q.report.as_ref().unwrap();
-    let packed = ServeModel::packed(&q.params, report, qcfg.w_bits);
+    let packed = ServeModel::packed(&q.params, report, qcfg.w_bits).unwrap();
     let dense = ServeModel::dense(&q.params);
     let prompts = vec![corpus.sample(12, 0), corpus.sample(12, 1)];
     let (out_p, stats_p) = packed.generate(&prompts, 16).unwrap();

@@ -84,7 +84,7 @@ fn prop_packed_forward_equals_dense_dequant() {
         let qp = minmax_scale(&w, g, &ClipFactors::Uniform(1.0),
                               &ClipFactors::Uniform(1.0), qmax);
         let codes = rtn_codes(&w, &qp, qmax);
-        let pl = PackedLinear::from_codes(&codes, o, i, bits, qp);
+        let pl = PackedLinear::from_codes(&codes, o, i, bits, qp).unwrap();
         let x = Tensor::randn(&[m, i], 1.0, rng);
         use tesseraq::model::hostfwd::LinearOp;
         let got = pl.forward(&x);

@@ -1,0 +1,180 @@
+//! Minimal, offline-compatible subset of the `anyhow` API.
+//!
+//! The build environment has no network access and no vendored crates.io
+//! registry, so this in-tree crate supplies exactly the surface the
+//! tesseraq codebase uses: `Error`, `Result`, `Context` (on both `Result`
+//! and `Option`), and the `bail!` / `ensure!` / `anyhow!` macros.
+//!
+//! The error is a chain of human-readable messages, outermost first.
+//! `{}` displays the outermost message, `{:#}` joins the chain with
+//! `": "` (matching anyhow's alternate Display), and `{:?}` prints the
+//! outermost message followed by a "Caused by:" list.
+
+use std::fmt;
+
+/// Error type: a context chain, outermost message first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like real anyhow: Error deliberately does NOT implement std::error::Error,
+// which is what makes the blanket From impl below coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Preserve the std source chain as context entries.
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Attach context to fallible values (`Result` and `Option`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        let e = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        Err(e).context("reading file")
+    }
+
+    #[test]
+    fn display_modes() {
+        let err = io_fail().unwrap_err();
+        assert_eq!(format!("{err}"), "reading file");
+        assert_eq!(format!("{err:#}"), "reading file: gone");
+        assert!(format!("{err:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let v: Option<u32> = None;
+        let err = v.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(err.to_string(), "missing 7");
+
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert!(f(12).unwrap_err().to_string().contains("too big"));
+        assert!(f(3).is_err());
+    }
+
+    #[test]
+    fn question_mark_conversion() {
+        fn g() -> Result<u32> {
+            let n: u32 = "17".parse()?;
+            Ok(n)
+        }
+        assert_eq!(g().unwrap(), 17);
+    }
+}

@@ -1,0 +1,122 @@
+//! PJRT/XLA API **stub**.
+//!
+//! The full environment vendors an `xla` crate backed by the PJRT CPU
+//! plugin (see rust/src/runtime/mod.rs). This stub mirrors that crate's
+//! type and method surface so the workspace builds and the host-side
+//! paths (quantizer, packed serving, host-forward calibration fallback,
+//! resilience layer) run everywhere; every device entry point returns a
+//! clean `XlaError` instead of linking against PJRT.
+//!
+//! `Engine::new` therefore fails gracefully in stub builds, which is
+//! exactly the "persistent artifact failure" regime the robust layer is
+//! designed to survive: callers fall back to `model/hostfwd.rs`.
+//! Artifact-gated integration tests detect the missing runtime and skip.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla (stub): {}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError(format!(
+        "{what} requires the PJRT-backed xla crate; this build uses the in-tree stub"
+    ))
+}
+
+pub struct PjRtClient(());
+pub struct PjRtDevice(());
+pub struct PjRtBuffer(());
+pub struct PjRtLoadedExecutable(());
+pub struct HloModuleProto(());
+pub struct XlaComputation(());
+pub struct Literal(());
+pub struct ArrayShape(Vec<i64>);
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("buffer_from_host_buffer"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<L: Borrow<PjRtBuffer>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute_b"))
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("to_literal_sync"))
+    }
+}
+
+impl Literal {
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(unavailable("Literal::array_shape"))
+    }
+
+    pub fn to_vec<T: Default + Clone>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_errors_are_descriptive() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("stub"));
+    }
+}
