@@ -16,6 +16,9 @@ pub struct GptqOutput {
     pub wq: Tensor,
     /// Group quant params actually used.
     pub qp: QParams,
+    /// Integer codes [out*in] on the final grid — `dequant_codes` over
+    /// these with `qp` reproduces the serving-path weights.
+    pub codes: Vec<u16>,
 }
 
 /// Quantize one linear with GPTQ given its input activations x [rows, in].
@@ -46,6 +49,7 @@ pub fn gptq_linear(
     let mut s = Tensor::zeros(&[o, ng]);
     let mut z = Tensor::zeros(&[o, ng]);
     let mut wq = vec![0.0f32; o * i];
+    let mut codes = vec![0u16; o * i];
 
     for j in 0..i {
         let gi = j / g;
@@ -82,6 +86,7 @@ pub fn gptq_linear(
             let q = (round_te((wv / sv) as f32) as f64 + zv).clamp(0.0, qmax as f64);
             let deq = sv * (q - zv);
             wq[r * i + j] = deq as f32;
+            codes[r * i + j] = q as u16;
             let err = (wv - deq) / hjj;
             // propagate to the remaining columns
             for k in (j + 1)..i {
@@ -93,6 +98,7 @@ pub fn gptq_linear(
     GptqOutput {
         wq: Tensor::new(vec![o, i], wq),
         qp: QParams { s, z, group: g },
+        codes,
     }
 }
 
@@ -154,6 +160,24 @@ mod tests {
                 );
                 assert!(code.round() >= -0.5 && code.round() <= 7.5);
             }
+        }
+    }
+
+    #[test]
+    fn gptq_codes_match_dequant_path() {
+        let mut rng = Pcg32::seeded(3);
+        let (o, i) = (8, 32);
+        let w = Tensor::randn(&[o, i], 1.0, &mut rng);
+        let x = Tensor::randn(&[64, i], 1.0, &mut rng);
+        let qcfg = QuantConfig::weight_only(3, GroupScheme::Group(16));
+        let out = gptq_linear(&w, &x, &qcfg, 0.01);
+        assert_eq!(out.codes.len(), o * i);
+        let deq = crate::quant::dequant_codes(&out.codes, o, i, &out.qp);
+        for (idx, (a, b)) in deq.data.iter().zip(&out.wq.data).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                "elem {idx}: dequant {a} vs wq {b}"
+            );
         }
     }
 

@@ -1,0 +1,474 @@
+//! The unified block-reconstruction driver — ONE resumable, sentinel-
+//! guarded block loop shared by every reconstruction-style PTQ method
+//! (TesseraQ/PAR, OmniQuant/LWC, GPTQ).
+//!
+//! The skeleton every method shares — FP teacher targets on the
+//! quantized-prefix stream, per-block optimization, merging the final
+//! codes into the model, propagating the student stream — lives here
+//! exactly once. A method plugs in as a [`BlockOptimizer`]; the
+//! [`ReconstructionDriver`] owns the `CalibSet`, the `ForwardBackend`
+//! (device artifact with retries, host reference fallback), per-block
+//! `.tsqb` checkpointing keyed by a fingerprint that includes the
+//! optimizer's method tag, resume (restored blocks are re-merged and the
+//! stream rebuilt through them, bit-identically), and the fault-injection
+//! kill site. Iterative optimizers additionally reuse the sentinel
+//! rollback loop via [`GuardedIter`]/[`run_guarded`].
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::pipeline::{CalibSet, ForwardBackend};
+use crate::model::{hostfwd, BlockView, Params};
+use crate::quant::{self, dequant_codes, QParams, QuantConfig};
+use crate::robust::checkpoint::fnv1a64;
+use crate::robust::{
+    BlockCheckpoint, CheckpointStore, RobustConfig, Sentinel, SentinelConfig, KILL_MARKER,
+};
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+/// How a block's final codes were produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockStatus {
+    /// The method's full optimization ran to completion.
+    Optimized,
+    /// The resilience layer degraded this block to its RTN-style fallback
+    /// (sentinel retry budget exhausted, or no step path available).
+    RtnFallback,
+}
+
+/// Per-block calibration record (Fig. 4 traces + Table 7 flip stats).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockTrace {
+    pub layer: usize,
+    /// reconstruction MSE after each optimization step
+    pub losses: Vec<f32>,
+    /// per linear: (flipped vs RTN, total rounding variables)
+    pub flips: BTreeMap<String, (usize, usize)>,
+    /// loss right before any optimization (RTN-equivalent start)
+    pub initial_loss: f32,
+    pub status: BlockStatus,
+}
+
+pub struct CalibReport {
+    pub per_block: Vec<BlockTrace>,
+    /// per block, per linear: final integer codes + effective dequant
+    /// params — ready for packing/serving.
+    pub quantized: Vec<BTreeMap<String, (Vec<u16>, QParams)>>,
+    pub wall_s: f64,
+}
+
+impl CalibReport {
+    /// Blocks the resilience layer degraded to RTN.
+    pub fn fallback_blocks(&self) -> Vec<usize> {
+        self.per_block
+            .iter()
+            .filter(|t| t.status == BlockStatus::RtnFallback)
+            .map(|t| t.layer)
+            .collect()
+    }
+}
+
+/// One block's result, handed back to the driver for merge + checkpoint.
+pub struct BlockOutcome {
+    pub trace: BlockTrace,
+    pub quantized: BTreeMap<String, (Vec<u16>, QParams)>,
+    /// Method-specific side state persisted alongside the codes (e.g. the
+    /// LWC clip tensors) so resume can rebuild it; empty for methods
+    /// without any.
+    pub extras: BTreeMap<String, Tensor>,
+}
+
+/// Everything the driver lends an optimizer for one block.
+pub struct BlockCtx<'a> {
+    pub layer: usize,
+    pub eng: Option<&'a Engine>,
+    pub backend: &'a ForwardBackend<'a>,
+    pub set: &'a CalibSet,
+    /// FP teacher outputs for this block on the quantized-prefix stream;
+    /// `None` when the optimizer reported it needs no teacher.
+    pub teacher: Option<&'a Tensor>,
+    pub robust: &'a RobustConfig,
+}
+
+/// A reconstruction-style PTQ method, pluggable into the driver.
+pub trait BlockOptimizer {
+    /// Stable tag mixed into the checkpoint fingerprint (and the per-run
+    /// checkpoint subdirectory name).
+    fn method_tag(&self) -> &'static str;
+
+    /// Every knob that affects this optimizer's outputs, serialized for
+    /// the fingerprint. Two runs with equal config strings (and equal
+    /// model/tokens) must produce bit-identical blocks.
+    fn config_string(&self) -> String;
+
+    /// Should the driver compute FP teacher targets for each block?
+    fn needs_teacher(&self) -> bool {
+        true
+    }
+
+    /// qmax for propagating the student stream between blocks
+    /// (`A16_SENTINEL` = FP activations).
+    fn propagate_qmax(&self) -> f32;
+
+    fn optimize_block(&mut self, ctx: &BlockCtx, bw: &BlockView) -> Result<BlockOutcome>;
+
+    /// Called for each block restored from a checkpoint on resume, so the
+    /// optimizer can rebuild any side state it keeps (default: ignore).
+    fn observe_restored(&mut self, _layer: usize, _ckpt: &BlockCheckpoint) {}
+}
+
+/// The one block-loop skeleton. Construct with the run's engine handle
+/// and resilience knobs, then [`run`](ReconstructionDriver::run) any
+/// [`BlockOptimizer`] over the model in place.
+pub struct ReconstructionDriver<'a> {
+    eng: Option<&'a Engine>,
+    robust: &'a RobustConfig,
+}
+
+impl<'a> ReconstructionDriver<'a> {
+    pub fn new(eng: Option<&'a Engine>, robust: &'a RobustConfig) -> Self {
+        // Arm engine-level fault injection before any artifact compiles.
+        if let (Some(e), Some(plan)) = (eng, &robust.faults) {
+            e.set_fault_plan(Some(plan.clone()));
+        }
+        ReconstructionDriver { eng, robust }
+    }
+
+    pub fn run(
+        &self,
+        params: &mut Params,
+        opt: &mut dyn BlockOptimizer,
+        tokens: &[i32],
+        n_seq: usize,
+    ) -> Result<CalibReport> {
+        let t0 = Instant::now();
+        let size = params.cfg.name.clone();
+        let backend = ForwardBackend::new(self.eng, &params.cfg, &size, &self.robust.retry);
+        let n_layers = params.cfg.n_layers;
+
+        // Checkpoint store under a per-run subdirectory so different
+        // methods/configs sharing one --checkpoint-dir never collide.
+        let fingerprint = run_fingerprint(params, opt, tokens, n_seq);
+        let store = match &self.robust.checkpoint_dir {
+            Some(dir) => {
+                let sub = dir.join(format!("{}_{fingerprint:016x}", opt.method_tag()));
+                Some(CheckpointStore::new(sub, fingerprint)?)
+            }
+            None => None,
+        };
+
+        let mut per_block: Vec<BlockTrace> = Vec::new();
+        let mut quantized: Vec<BTreeMap<String, (Vec<u16>, QParams)>> = Vec::new();
+        if let Some(store) = &store {
+            if self.robust.resume {
+                for ckpt in store.load_prefix(n_layers) {
+                    merge_block(params, ckpt.trace.layer, &ckpt.quantized);
+                    opt.observe_restored(ckpt.trace.layer, &ckpt);
+                    per_block.push(ckpt.trace);
+                    quantized.push(ckpt.quantized);
+                }
+                if !per_block.is_empty() {
+                    eprintln!(
+                        "[robust] resuming: {}/{} blocks restored from {}",
+                        per_block.len(),
+                        n_layers,
+                        store.dir().display()
+                    );
+                }
+            } else {
+                store.clear()?;
+            }
+        }
+        let start_block = per_block.len();
+
+        let mut set = CalibSet::from_tokens(params, tokens, n_seq)?;
+        let prop_qmax = opt.propagate_qmax();
+        // Rebuild the residual stream through the restored (already
+        // merged) prefix — the same forward ops as the original pass, so
+        // a resumed run reproduces the interrupted run bit for bit.
+        for l in 0..start_block {
+            let bw_q = params.block(l);
+            set.x = backend.forward_all(&bw_q, &set, prop_qmax)?;
+        }
+
+        for l in start_block..n_layers {
+            let bw = params.block(l);
+            let teacher = if opt.needs_teacher() {
+                Some(backend.forward_all(&bw, &set, quant::A16_SENTINEL)?)
+            } else {
+                None
+            };
+            let ctx = BlockCtx {
+                layer: l,
+                eng: self.eng,
+                backend: &backend,
+                set: &set,
+                teacher: teacher.as_ref(),
+                robust: self.robust,
+            };
+            let outcome = opt.optimize_block(&ctx, &bw)?;
+            merge_block(params, l, &outcome.quantized);
+            if let Some(store) = &store {
+                store.save_block(
+                    l,
+                    &BlockCheckpoint {
+                        trace: outcome.trace.clone(),
+                        quantized: outcome.quantized.clone(),
+                        extras: outcome.extras.clone(),
+                    },
+                )?;
+            }
+            per_block.push(outcome.trace);
+            quantized.push(outcome.quantized);
+            if self.robust.faults.as_ref().is_some_and(|f| f.kill_after_block(l)) {
+                bail!("{KILL_MARKER} after block {l}");
+            }
+            // propagate the stream through the merged quantized block
+            let bw_q = params.block(l);
+            set.x = backend.forward_all(&bw_q, &set, prop_qmax)?;
+        }
+
+        Ok(CalibReport { per_block, quantized, wall_s: t0.elapsed().as_secs_f64() })
+    }
+}
+
+/// Hash of everything that determines a run's outputs: the checkpoint
+/// format version, the optimizer's method tag and config string, the
+/// model name, the calibration tokens, and the (embedding) weights.
+/// Stored in every block checkpoint; a mismatch refuses resume.
+pub fn run_fingerprint(
+    params: &Params,
+    opt: &dyn BlockOptimizer,
+    tokens: &[i32],
+    n_seq: usize,
+) -> u64 {
+    let mut bytes = format!(
+        "v{};method={};model={};cfg={};n_seq={}",
+        crate::robust::checkpoint::VERSION,
+        opt.method_tag(),
+        params.cfg.name,
+        opt.config_string(),
+        n_seq,
+    )
+    .into_bytes();
+    for &t in tokens {
+        bytes.extend_from_slice(&t.to_le_bytes());
+    }
+    // cheap weight identity: the embedding table's raw bits
+    for &v in &params.get("emb").data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    fnv1a64(&bytes)
+}
+
+/// Merge one block's final codes into the model (fake-quant weights).
+/// Both fresh and resumed runs merge through this exact f32 dequant, which
+/// is what makes resume bit-identical for every method.
+pub fn merge_block(
+    params: &mut Params,
+    layer: usize,
+    qblock: &BTreeMap<String, (Vec<u16>, QParams)>,
+) {
+    for (name, (codes, qp)) in qblock {
+        let o = qp.s.shape[0];
+        let i = codes.len() / o;
+        let wq = dequant_codes(codes, o, i, qp);
+        params.set_block_linear(layer, name, &wq);
+    }
+}
+
+/// A recoverable failure inside one guarded iteration.
+pub enum IterFailure {
+    /// Step execution kept failing after retries — not recoverable by
+    /// rollback; degrade the block.
+    Exec(String),
+    /// NaN/Inf/diverged loss — recoverable by rollback + LR backoff.
+    Numeric(String),
+}
+
+/// A sentinel-guarded optimization loop: the driver owns snapshotting,
+/// rollback, and the retry budget; the optimizer owns the per-iteration
+/// math. `snapshot`/`restore` must round-trip everything `iteration`
+/// mutates (including loss traces), so a rolled-back iteration leaves no
+/// residue.
+pub trait GuardedIter {
+    type Snap;
+
+    fn snapshot(&self) -> Self::Snap;
+
+    fn restore(&mut self, snap: &Self::Snap);
+
+    /// Run iteration `k` (1-based). The sentinel supplies the retry-scaled
+    /// learning rate (`lr_scale`) and classifies losses via `observe`.
+    fn iteration(&mut self, k: usize, sentinel: &mut Sentinel) -> Result<Option<IterFailure>>;
+}
+
+/// Run `iterations` guarded iterations over `g`. `Ok(None)` = completed;
+/// `Ok(Some(reason))` = degrade this block to its fallback.
+pub fn run_guarded<G: GuardedIter>(
+    g: &mut G,
+    layer: usize,
+    iterations: usize,
+    scfg: SentinelConfig,
+) -> Result<Option<String>> {
+    let mut sentinel = Sentinel::new(scfg);
+    let mut k = 1;
+    while k <= iterations {
+        let snap = g.snapshot();
+        match g.iteration(k, &mut sentinel)? {
+            None => k += 1,
+            Some(IterFailure::Exec(reason)) => {
+                return Ok(Some(format!("step execution: {reason}")));
+            }
+            Some(IterFailure::Numeric(reason)) => match sentinel.trip() {
+                Some(scale) => {
+                    eprintln!(
+                        "[robust] block {layer} iteration {k}: {reason}; rolling back to \
+                         the iteration-start snapshot, retrying with lr scale {scale}"
+                    );
+                    g.restore(&snap);
+                }
+                None => {
+                    return Ok(Some(format!(
+                        "{reason} after {} rollbacks",
+                        sentinel.retries_used()
+                    )));
+                }
+            },
+        }
+    }
+    Ok(None)
+}
+
+/// GPTQ as a [`BlockOptimizer`]: per-linear Hessian-compensated rounding
+/// on host-collected activation taps. No teacher targets, no step loop —
+/// one deterministic pass per block.
+pub struct GptqOptimizer {
+    qcfg: QuantConfig,
+    damp: f64,
+}
+
+impl GptqOptimizer {
+    pub fn new(qcfg: QuantConfig) -> Self {
+        GptqOptimizer { qcfg, damp: 0.01 }
+    }
+}
+
+impl BlockOptimizer for GptqOptimizer {
+    fn method_tag(&self) -> &'static str {
+        "gptq"
+    }
+
+    fn config_string(&self) -> String {
+        format!("quant={};damp={}", self.qcfg.label(), self.damp)
+    }
+
+    fn needs_teacher(&self) -> bool {
+        false
+    }
+
+    fn propagate_qmax(&self) -> f32 {
+        self.qcfg.qmax_act()
+    }
+
+    fn optimize_block(&mut self, ctx: &BlockCtx, bw: &BlockView) -> Result<BlockOutcome> {
+        // Collect per-linear input taps with one host forward over the
+        // quantized-prefix stream (A16 sentinel = FP passthrough).
+        let opts = hostfwd::BlockFwdOpts {
+            act_qmax: Some(self.qcfg.qmax_act()),
+            collect: true,
+        };
+        let (_, taps) = hostfwd::block_fwd(&ctx.set.x, bw, &ctx.backend.cfg, &opts);
+        let qmax = self.qcfg.qmax_w();
+        let mut trace = BlockTrace {
+            layer: ctx.layer,
+            losses: Vec::new(),
+            flips: BTreeMap::new(),
+            initial_loss: 0.0,
+            status: BlockStatus::Optimized,
+        };
+        let mut quantized = BTreeMap::new();
+        for (name, w) in &bw.linears {
+            let tap = taps
+                .get(hostfwd::tap_for_linear(name))
+                .with_context(|| format!("no activation tap for {name}"))?;
+            let out = crate::baselines::gptq::gptq_linear(w, tap, &self.qcfg, self.damp);
+            // flips vs plain RTN on the same final grid — how many codes
+            // the error compensation actually moved
+            let rtn = quant::rtn_codes(w, &out.qp, qmax);
+            let moved = out.codes.iter().zip(&rtn).filter(|(a, b)| a != b).count();
+            trace.flips.insert(name.clone(), (moved, out.codes.len()));
+            quantized.insert(name.clone(), (out.codes, out.qp));
+        }
+        Ok(BlockOutcome { trace, quantized, extras: BTreeMap::new() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::quant::GroupScheme;
+    use crate::tensor::Pcg32;
+
+    struct TagOnly(&'static str, String);
+
+    impl BlockOptimizer for TagOnly {
+        fn method_tag(&self) -> &'static str {
+            self.0
+        }
+        fn config_string(&self) -> String {
+            self.1.clone()
+        }
+        fn propagate_qmax(&self) -> f32 {
+            quant::A16_SENTINEL
+        }
+        fn optimize_block(&mut self, _: &BlockCtx, _: &BlockView) -> Result<BlockOutcome> {
+            unreachable!("fingerprint tests never run blocks")
+        }
+    }
+
+    #[test]
+    fn fingerprint_tracks_method_config_and_data() {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let mut rng = Pcg32::seeded(0);
+        let p = Params::init(&cfg, &mut rng);
+        let tokens: Vec<i32> = (0..64).map(|i| i % 100).collect();
+        let a = run_fingerprint(&p, &TagOnly("m1", "lr=1".into()), &tokens, 4);
+        assert_eq!(
+            a,
+            run_fingerprint(&p, &TagOnly("m1", "lr=1".into()), &tokens, 4),
+            "deterministic"
+        );
+        assert_ne!(
+            a,
+            run_fingerprint(&p, &TagOnly("m2", "lr=1".into()), &tokens, 4),
+            "method tag changes fingerprint"
+        );
+        assert_ne!(
+            a,
+            run_fingerprint(&p, &TagOnly("m1", "lr=2".into()), &tokens, 4),
+            "config changes fingerprint"
+        );
+        let mut tok2 = tokens.clone();
+        tok2[0] += 1;
+        assert_ne!(
+            a,
+            run_fingerprint(&p, &TagOnly("m1", "lr=1".into()), &tok2, 4),
+            "tokens change fingerprint"
+        );
+    }
+
+    #[test]
+    fn gptq_optimizer_flips_are_bounded() {
+        // sanity on the flip metric: every count <= total
+        let qcfg = QuantConfig::weight_only(2, GroupScheme::Group(32));
+        let opt = GptqOptimizer::new(qcfg);
+        assert_eq!(opt.method_tag(), "gptq");
+        assert!(!opt.needs_teacher());
+        assert_eq!(opt.propagate_qmax(), quant::A16_SENTINEL);
+    }
+}

@@ -2,16 +2,28 @@
 //! reconstruction over per-group clip logits (gamma, beta) with STE,
 //! driven through the `block_lwc_step` artifact. Produces the clip
 //! factors TesseraQ uses for its W2A16 initialization (paper §4.1).
+//!
+//! The block-loop plumbing (teacher targets, checkpoint/resume, stream
+//! propagation) lives in [`crate::coordinator::driver`]; this module owns
+//! only the LWC math and plugs in as [`LwcOptimizer`]. The learned clip
+//! tensors ride along in each checkpoint's `extras`, so a killed LWC run
+//! resumes with its clips intact.
 
 use std::collections::BTreeMap;
+use std::rc::Rc;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{ensure, Result};
 
+use crate::coordinator::driver::{
+    run_guarded, BlockCtx, BlockOptimizer, BlockOutcome, BlockStatus, BlockTrace, CalibReport,
+    GuardedIter, IterFailure, ReconstructionDriver,
+};
 use crate::coordinator::par::BlockClips;
-use crate::coordinator::pipeline::{BlockRunner, CalibSet};
-use crate::model::{Params, LINEAR_NAMES};
-use crate::quant::{self, minmax_scale, rtn_qdq, ClipFactors, QuantConfig};
-use crate::runtime::{Arg, Engine};
+use crate::coordinator::pipeline::CalibSet;
+use crate::model::{BlockView, Params, LINEAR_NAMES};
+use crate::quant::{self, minmax_scale, ClipFactors, QuantConfig};
+use crate::robust::{with_retry, BlockCheckpoint, LossHealth, RobustConfig, Sentinel};
+use crate::runtime::{Arg, Artifact, Engine};
 use crate::tensor::Tensor;
 
 #[derive(Debug, Clone)]
@@ -36,10 +48,23 @@ pub struct LwcReport {
     /// learned per-block clip factors (sigmoid of the raw logits)
     pub clips: Vec<BlockClips>,
     pub losses: Vec<Vec<f32>>,
+    /// the driver's full report (traces, codes, fallback blocks)
+    pub calib: CalibReport,
+}
+
+/// The mutable per-block LWC state: raw clip logits + their Adam moments.
+#[derive(Clone)]
+pub struct LwcBlockState {
+    pub gam: BTreeMap<String, Tensor>,
+    pub bet: BTreeMap<String, Tensor>,
+    pub adam: BTreeMap<String, [Tensor; 4]>,
 }
 
 /// Run LWC calibration in place (weights become fake-quantized) and
 /// return the learned clips (reusable as a TesseraQ initializer).
+///
+/// Thin wrapper over [`calibrate_lwc_robust`] with the default resilience
+/// knobs (sentinels + retries on, no checkpointing).
 pub fn calibrate_lwc(
     eng: &Engine,
     params: &mut Params,
@@ -47,100 +72,189 @@ pub fn calibrate_lwc(
     n_seq: usize,
     lcfg: &LwcConfig,
 ) -> Result<LwcReport> {
+    calibrate_lwc_robust(Some(eng), params, tokens, n_seq, lcfg, &RobustConfig::default())
+}
+
+/// Fault-tolerant LWC calibration through the unified
+/// [`ReconstructionDriver`]: per-block checkpoint/resume, sentinel
+/// rollback on NaN/Inf/divergence in the step loop, retry with host
+/// fallback for the forwards. With no engine (or no `block_lwc_step`
+/// artifact) every block degrades to RTN with the near-identity initial
+/// clips instead of erroring.
+pub fn calibrate_lwc_robust(
+    eng: Option<&Engine>,
+    params: &mut Params,
+    tokens: &[i32],
+    n_seq: usize,
+    lcfg: &LwcConfig,
+    robust: &RobustConfig,
+) -> Result<LwcReport> {
+    // Driver first: it arms the fault plan on the engine before any
+    // artifact compile, so compile@ faults reach the optimizer too.
+    let driver = ReconstructionDriver::new(eng, robust);
     let size = params.cfg.name.clone();
-    let scheme = lcfg.qcfg.scheme.tag();
-    let runner = BlockRunner::new(eng, &size)?;
-    let art = eng
-        .artifact(&format!("block_lwc_step.{size}.{scheme}"))
-        .with_context(|| format!("no LWC artifact for {size}/{scheme}"))?;
-    let batch = art.spec.meta.batch.unwrap_or(4);
-    ensure!(n_seq % batch == 0);
+    let mut opt = LwcOptimizer::new(eng, &size, lcfg, n_seq, robust)?;
+    let calib = driver.run(params, &mut opt, tokens, n_seq)?;
+    Ok(opt.into_report(calib))
+}
 
-    let qmax_w = lcfg.qcfg.qmax_w();
-    let qmax_act = lcfg.qcfg.qmax_act();
-    let mut set = CalibSet::from_tokens(params, tokens, n_seq);
-    let mut clips_out = Vec::new();
-    let mut losses_out = Vec::new();
+/// Like [`calibrate_lwc_robust`] but over a caller-built optimizer —
+/// lets tests install a [`LwcOptimizer::step_override`] and inspect the
+/// learned clips afterwards.
+pub fn calibrate_lwc_with(
+    eng: Option<&Engine>,
+    params: &mut Params,
+    opt: &mut LwcOptimizer,
+    tokens: &[i32],
+    n_seq: usize,
+    robust: &RobustConfig,
+) -> Result<CalibReport> {
+    let driver = ReconstructionDriver::new(eng, robust);
+    driver.run(params, opt, tokens, n_seq)
+}
 
-    for l in 0..params.cfg.n_layers {
-        let bw = params.block(l);
-        let y_all = runner.forward_all(&bw, &set, quant::A16_SENTINEL)?;
+/// OmniQuant-style LWC as a [`BlockOptimizer`].
+pub struct LwcOptimizer<'a> {
+    lcfg: &'a LwcConfig,
+    /// LWC step artifact; unavailable -> RTN with initial clips per block.
+    step_art: Option<Rc<Artifact>>,
+    batch: usize,
+    /// Learned clips per completed block (rebuilt from checkpoint extras
+    /// on resume), keyed by layer.
+    pub clips: BTreeMap<usize, BlockClips>,
+    /// Test hook: a scripted stand-in for the device step, called as
+    /// `f(state, t, lr) -> loss` with `t` 1-based. Takes precedence over
+    /// the artifact path, letting the sentinel/rollback machinery be
+    /// exercised without an engine.
+    pub step_override:
+        Option<Box<dyn FnMut(&mut LwcBlockState, usize, f32) -> Result<f32> + 'a>>,
+}
 
-        // state: raw logits init 4.0 (sigmoid ~ 0.982, near-identity clip)
-        let mut gam: BTreeMap<String, Tensor> = BTreeMap::new();
-        let mut bet: BTreeMap<String, Tensor> = BTreeMap::new();
-        let mut adam: BTreeMap<String, [Tensor; 4]> = BTreeMap::new();
-        for name in LINEAR_NAMES {
-            let w = &bw.linears[name];
-            let g = lcfg.qcfg.scheme.group_size(w.shape[1]);
-            let ng = w.shape[1] / g;
-            let shape = vec![w.shape[0], ng];
-            gam.insert(name.to_string(), Tensor::full(&shape, 4.0));
-            bet.insert(name.to_string(), Tensor::full(&shape, 4.0));
-            adam.insert(
-                name.to_string(),
-                [
-                    Tensor::zeros(&shape),
-                    Tensor::zeros(&shape),
-                    Tensor::zeros(&shape),
-                    Tensor::zeros(&shape),
-                ],
-            );
-        }
-
-        let mut losses = Vec::new();
-        for t in 1..=lcfg.steps {
-            let bi = t - 1;
-            let xb = set.batch(bi, batch);
-            let per = set.t * set.d * batch;
-            let start = (bi % set.n_batches(batch)) * per;
-            let yb = Tensor::new(
-                vec![batch, set.t, set.d],
-                y_all.data[start..start + per].to_vec(),
-            );
-
-            let mut args: Vec<Arg> =
-                vec![Arg::F32(&xb), Arg::F32(&yb), Arg::F32(&bw.norm1), Arg::F32(&bw.norm2)];
-            for name in LINEAR_NAMES {
-                args.push(Arg::F32(&bw.linears[name]));
-            }
-            for name in LINEAR_NAMES {
-                args.push(Arg::F32(&gam[name]));
-            }
-            for name in LINEAR_NAMES {
-                args.push(Arg::F32(&bet[name]));
-            }
-            for s in 0..4 {
-                for name in LINEAR_NAMES {
-                    args.push(Arg::F32(&adam[name][s]));
+impl<'a> LwcOptimizer<'a> {
+    pub fn new(
+        eng: Option<&Engine>,
+        size: &str,
+        lcfg: &'a LwcConfig,
+        n_seq: usize,
+        robust: &RobustConfig,
+    ) -> Result<LwcOptimizer<'a>> {
+        let scheme = lcfg.qcfg.scheme.tag();
+        let step_art = eng.and_then(|e| {
+            let name = format!("block_lwc_step.{size}.{scheme}");
+            match with_retry(&robust.retry, &format!("compiling {name}"), || e.artifact(&name)) {
+                Ok(a) => Some(a),
+                Err(err) => {
+                    eprintln!(
+                        "[robust] LWC step artifact unavailable; \
+                         degrading to RTN with initial clips per block: {err:#}"
+                    );
+                    None
                 }
             }
-            args.push(Arg::Scalar(lcfg.lr));
-            args.push(Arg::Scalar(t as f32));
-            args.push(Arg::Scalar(qmax_w));
-            args.push(Arg::Scalar(qmax_act));
+        });
+        let batch = step_art.as_ref().map_or(1, |a| a.spec.meta.batch.unwrap_or(4));
+        if step_art.is_some() {
+            ensure!(n_seq % batch == 0, "n_seq {n_seq} not divisible by batch {batch}");
+        }
+        Ok(LwcOptimizer { lcfg, step_art, batch, clips: BTreeMap::new(), step_override: None })
+    }
 
-            let outs = eng.run(&art, &args)?;
-            losses.push(outs[0].data[0]);
-            let n = LINEAR_NAMES.len();
-            for (li, name) in LINEAR_NAMES.iter().enumerate() {
-                gam.insert(name.to_string(), outs[1 + li].clone());
-                bet.insert(name.to_string(), outs[1 + n + li].clone());
-                let st =
-                    adam.get_mut(*name).expect("adam state exists for every linear name");
-                for s in 0..4 {
-                    st[s] = outs[1 + (2 + s) * n + li].clone();
+    /// Consume the optimizer into the public report shape.
+    pub fn into_report(self, calib: CalibReport) -> LwcReport {
+        let losses = calib.per_block.iter().map(|t| t.losses.clone()).collect();
+        LwcReport { clips: self.clips.into_values().collect(), losses, calib }
+    }
+}
+
+impl BlockOptimizer for LwcOptimizer<'_> {
+    fn method_tag(&self) -> &'static str {
+        "lwc"
+    }
+
+    fn config_string(&self) -> String {
+        let c = self.lcfg;
+        format!(
+            "quant={};steps={};lr={};prop={}",
+            c.qcfg.label(),
+            c.steps,
+            c.lr,
+            c.propagate_act_quant
+        )
+    }
+
+    fn needs_teacher(&self) -> bool {
+        // The scripted override ignores the reconstruction target; without
+        // a step path every block is RTN and the teacher would be wasted.
+        self.step_override.is_none() && self.step_art.is_some()
+    }
+
+    fn propagate_qmax(&self) -> f32 {
+        if self.lcfg.propagate_act_quant {
+            self.lcfg.qcfg.qmax_act()
+        } else {
+            quant::A16_SENTINEL
+        }
+    }
+
+    fn optimize_block(&mut self, ctx: &BlockCtx, bw: &BlockView) -> Result<BlockOutcome> {
+        let lcfg = self.lcfg;
+        let qmax_w = lcfg.qcfg.qmax_w();
+        let l = ctx.layer;
+        let mut state = init_state(bw, lcfg);
+        let mut trace = BlockTrace {
+            layer: l,
+            losses: Vec::new(),
+            flips: BTreeMap::new(),
+            initial_loss: f32::NAN,
+            status: BlockStatus::Optimized,
+        };
+
+        let step = if let Some(f) = self.step_override.as_mut() {
+            Some(LwcStepPath::Override(f.as_mut()))
+        } else {
+            match (ctx.eng, self.step_art.as_deref(), ctx.teacher) {
+                (Some(eng), Some(art), Some(teacher)) => {
+                    Some(LwcStepPath::Artifact { eng, art, teacher })
                 }
+                _ => None,
             }
+        };
+        let fallback_reason = match step {
+            Some(step) => {
+                let mut lwc = LwcLoop {
+                    step,
+                    set: ctx.set,
+                    bw,
+                    batch: self.batch,
+                    lcfg,
+                    robust: ctx.robust,
+                    layer: l,
+                    state: &mut state,
+                    trace: &mut trace,
+                };
+                run_guarded(&mut lwc, l, lcfg.steps, ctx.robust.sentinel)?
+            }
+            None => Some("no LWC step path available".to_string()),
+        };
+
+        if let Some(reason) = &fallback_reason {
+            eprintln!("[robust] block {l}: RTN-with-initial-clips fallback ({reason})");
+            trace.losses.clear();
+            trace.initial_loss = 0.0;
+            trace.status = BlockStatus::RtnFallback;
+            // reset the logits so the merge uses the near-identity clips
+            state = init_state(bw, lcfg);
         }
 
-        // merge: RTN with learned clips
+        // merge: RTN with the (learned or initial) clips
+        let mut quantized = BTreeMap::new();
+        let mut extras = BTreeMap::new();
         let mut block_clips: BlockClips = BTreeMap::new();
         for name in LINEAR_NAMES {
             let w = &bw.linears[name];
             let g = lcfg.qcfg.scheme.group_size(w.shape[1]);
-            let gm = gam[name].map(quant::sigmoid);
-            let bt = bet[name].map(quant::sigmoid);
+            let gm = state.gam[name].map(quant::sigmoid);
+            let bt = state.bet[name].map(quant::sigmoid);
             let qp = minmax_scale(
                 w,
                 g,
@@ -148,17 +262,186 @@ pub fn calibrate_lwc(
                 &ClipFactors::PerGroup(bt.clone()),
                 qmax_w,
             );
-            let wq = rtn_qdq(w, &qp, qmax_w);
-            params.set_block_linear(l, name, &wq);
+            let codes = quant::rtn_codes(w, &qp, qmax_w);
+            trace.flips.insert(name.to_string(), (0, codes.len()));
+            extras.insert(format!("gm:{name}"), gm.clone());
+            extras.insert(format!("bt:{name}"), bt.clone());
+            quantized.insert(name.to_string(), (codes, qp));
             block_clips.insert(name.to_string(), (gm, bt));
         }
-        clips_out.push(block_clips);
-        losses_out.push(losses);
-
-        let bw_q = params.block(l);
-        let prop = if lcfg.propagate_act_quant { qmax_act } else { quant::A16_SENTINEL };
-        set.x = runner.forward_all(&bw_q, &set, prop)?;
+        self.clips.insert(l, block_clips);
+        Ok(BlockOutcome { trace, quantized, extras })
     }
 
-    Ok(LwcReport { clips: clips_out, losses: losses_out })
+    fn observe_restored(&mut self, layer: usize, ckpt: &BlockCheckpoint) {
+        let mut block_clips: BlockClips = BTreeMap::new();
+        for name in LINEAR_NAMES {
+            if let (Some(gm), Some(bt)) = (
+                ckpt.extras.get(&format!("gm:{name}")),
+                ckpt.extras.get(&format!("bt:{name}")),
+            ) {
+                block_clips.insert(name.to_string(), (gm.clone(), bt.clone()));
+            }
+        }
+        self.clips.insert(layer, block_clips);
+    }
+}
+
+/// State init: raw logits 4.0 (sigmoid ~ 0.982, near-identity clip).
+fn init_state(bw: &BlockView, lcfg: &LwcConfig) -> LwcBlockState {
+    let mut gam = BTreeMap::new();
+    let mut bet = BTreeMap::new();
+    let mut adam = BTreeMap::new();
+    for name in LINEAR_NAMES {
+        let w = &bw.linears[name];
+        let g = lcfg.qcfg.scheme.group_size(w.shape[1]);
+        let ng = w.shape[1] / g;
+        let shape = vec![w.shape[0], ng];
+        gam.insert(name.to_string(), Tensor::full(&shape, 4.0));
+        bet.insert(name.to_string(), Tensor::full(&shape, 4.0));
+        adam.insert(
+            name.to_string(),
+            [
+                Tensor::zeros(&shape),
+                Tensor::zeros(&shape),
+                Tensor::zeros(&shape),
+                Tensor::zeros(&shape),
+            ],
+        );
+    }
+    LwcBlockState { gam, bet, adam }
+}
+
+enum LwcStepPath<'a, 'f> {
+    Artifact { eng: &'a Engine, art: &'a Artifact, teacher: &'a Tensor },
+    Override(&'a mut (dyn FnMut(&mut LwcBlockState, usize, f32) -> Result<f32> + 'f)),
+}
+
+/// One LWC block's sentinel-guarded loop; each [`GuardedIter::iteration`]
+/// is a single Adam step, so a NaN rolls back exactly one step.
+struct LwcLoop<'a, 'f> {
+    step: LwcStepPath<'a, 'f>,
+    set: &'a CalibSet,
+    bw: &'a BlockView,
+    batch: usize,
+    lcfg: &'a LwcConfig,
+    robust: &'a RobustConfig,
+    layer: usize,
+    state: &'a mut LwcBlockState,
+    trace: &'a mut BlockTrace,
+}
+
+struct LwcSnapshot {
+    state: LwcBlockState,
+    n_losses: usize,
+    initial_loss: f32,
+}
+
+impl GuardedIter for LwcLoop<'_, '_> {
+    type Snap = LwcSnapshot;
+
+    fn snapshot(&self) -> LwcSnapshot {
+        LwcSnapshot {
+            state: self.state.clone(),
+            n_losses: self.trace.losses.len(),
+            initial_loss: self.trace.initial_loss,
+        }
+    }
+
+    fn restore(&mut self, snap: &LwcSnapshot) {
+        *self.state = snap.state.clone();
+        self.trace.losses.truncate(snap.n_losses);
+        self.trace.initial_loss = snap.initial_loss;
+    }
+
+    fn iteration(&mut self, k: usize, sentinel: &mut Sentinel) -> Result<Option<IterFailure>> {
+        let lcfg = self.lcfg;
+        let lr = lcfg.lr * sentinel.lr_scale;
+        let loss_res = match &mut self.step {
+            LwcStepPath::Artifact { eng, art, teacher } => {
+                let (eng, art, teacher) = (*eng, *art, *teacher);
+                let bi = k - 1;
+                let xb = self.set.wrapping_batch(bi, self.batch);
+                let yb = self.set.wrapping_slice(teacher, bi, self.batch);
+                let bw = self.bw;
+                let state = &mut *self.state;
+                with_retry(&self.robust.retry, "LWC step", || {
+                    lwc_step(eng, art, &xb, &yb, bw, &mut *state, lr, k as f32, lcfg)
+                })
+            }
+            LwcStepPath::Override(f) => f(&mut *self.state, k, lr),
+        };
+        let mut loss = match loss_res {
+            Ok(loss) => loss,
+            Err(e) => return Ok(Some(IterFailure::Exec(format!("{e:#}")))),
+        };
+        if self.robust.faults.as_ref().is_some_and(|p| p.nan_loss(self.layer, k)) {
+            loss = f32::NAN;
+        }
+        match sentinel.observe(loss) {
+            LossHealth::Ok => {
+                if self.trace.initial_loss.is_nan() {
+                    self.trace.initial_loss = loss;
+                }
+                self.trace.losses.push(loss);
+            }
+            LossHealth::NonFinite => {
+                return Ok(Some(IterFailure::Numeric(format!("non-finite loss {loss}"))));
+            }
+            LossHealth::Diverged { baseline } => {
+                return Ok(Some(IterFailure::Numeric(format!(
+                    "loss {loss:.3e} diverged (baseline {baseline:.3e})"
+                ))));
+            }
+        }
+        Ok(None)
+    }
+}
+
+/// One STE clip-logit Adam step through the artifact; returns the loss
+/// and updates the host-side state in place.
+fn lwc_step(
+    eng: &Engine,
+    art: &Artifact,
+    xb: &Tensor,
+    yb: &Tensor,
+    bw: &BlockView,
+    state: &mut LwcBlockState,
+    lr: f32,
+    t: f32,
+    lcfg: &LwcConfig,
+) -> Result<f32> {
+    let mut args: Vec<Arg> =
+        vec![Arg::F32(xb), Arg::F32(yb), Arg::F32(&bw.norm1), Arg::F32(&bw.norm2)];
+    for name in LINEAR_NAMES {
+        args.push(Arg::F32(&bw.linears[name]));
+    }
+    for name in LINEAR_NAMES {
+        args.push(Arg::F32(&state.gam[name]));
+    }
+    for name in LINEAR_NAMES {
+        args.push(Arg::F32(&state.bet[name]));
+    }
+    for s in 0..4 {
+        for name in LINEAR_NAMES {
+            args.push(Arg::F32(&state.adam[name][s]));
+        }
+    }
+    args.push(Arg::Scalar(lr));
+    args.push(Arg::Scalar(t));
+    args.push(Arg::Scalar(lcfg.qcfg.qmax_w()));
+    args.push(Arg::Scalar(lcfg.qcfg.qmax_act()));
+
+    let outs = eng.run(art, &args)?;
+    let loss = outs[0].data[0];
+    let n = LINEAR_NAMES.len();
+    for (li, name) in LINEAR_NAMES.iter().enumerate() {
+        state.gam.insert(name.to_string(), outs[1 + li].clone());
+        state.bet.insert(name.to_string(), outs[1 + n + li].clone());
+        let st = state.adam.get_mut(*name).expect("adam state exists for every linear name");
+        for s in 0..4 {
+            st[s] = outs[1 + (2 + s) * n + li].clone();
+        }
+    }
+    Ok(loss)
 }

@@ -1,18 +1,20 @@
 //! The TesseraQ calibration coordinator — the paper's system contribution
-//! at L3. Owns the block-wise reconstruction pipeline: teacher forwards,
-//! PAR harden/soften scheduling, DST, merging, and the OmniQuant-LWC
-//! baseline driver. The per-step math executes inside AOT artifacts
+//! at L3. [`driver`] owns the one resumable, sentinel-guarded block-loop
+//! skeleton every reconstruction method runs through; [`par`] (TesseraQ),
+//! [`lwc`] (OmniQuant) and the GPTQ optimizer in [`driver`] plug into it
+//! as `BlockOptimizer`s. The per-step math executes inside AOT artifacts
 //! (block_par_step / block_lwc_step / block_fp_fwd).
 
+pub mod driver;
 pub mod lwc;
 pub mod par;
 pub mod pipeline;
 pub mod pretrain;
 pub mod schedule;
 
-pub use par::{
-    calibrate_tesseraq, calibrate_tesseraq_robust, BlockStatus, BlockTrace, CalibReport,
-    TesseraqConfig,
+pub use driver::{
+    BlockOptimizer, BlockStatus, BlockTrace, CalibReport, ReconstructionDriver,
 };
+pub use par::{calibrate_tesseraq, calibrate_tesseraq_robust, TesseraqConfig};
 pub use pipeline::ForwardBackend;
 pub use schedule::Schedule;

@@ -1,37 +1,36 @@
 //! TesseraQ calibration: Progressive Adaptive Rounding + Dequantization
 //! Scale Tuning over block-wise reconstruction (paper Algorithm 1).
 //!
-//! Host side owns the PAR state (nu, v, Adam moments) and the harden
-//! phase (HS scoring + saturation at +-SAT_NU); each soften-phase step
-//! executes the AOT `block_par_step` artifact. Hardened logits receive
-//! exactly-zero gradients inside the artifact, so no masking is needed —
-//! the paper's memory-efficient trick.
+//! This module owns only the PAR math — the harden phase (HS scoring +
+//! saturation at +-SAT_NU), the soften-phase Adam steps through the AOT
+//! `block_par_step` artifact, and the final code emission. Everything a
+//! reconstruction method shares (teacher targets, checkpoint/resume,
+//! stream propagation, fault injection) lives in the unified
+//! [`crate::coordinator::driver`]; TesseraQ plugs in as [`ParOptimizer`]
+//! and reuses the sentinel rollback loop via the driver's `GuardedIter`.
 //!
-//! Resilience (`calibrate_tesseraq_robust`): each completed block is
-//! persisted to a checksummed checkpoint so a killed run resumes from the
-//! first incomplete block; numerical sentinels roll the soften loop back
-//! to the last iteration-start snapshot on NaN/Inf/divergence and retry
-//! with a backed-off learning rate before degrading the block to hardened
-//! RTN; artifact compile/execute failures retry with exponential backoff
-//! and then fall back to the host-side reference forward. Every recovery
-//! path warns instead of crashing.
+//! Hardened logits receive exactly-zero gradients inside the artifact, so
+//! no masking is needed — the paper's memory-efficient trick.
 
 use std::collections::BTreeMap;
+use std::rc::Rc;
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{ensure, Result};
 
-use crate::coordinator::pipeline::{CalibSet, ForwardBackend};
+pub use crate::coordinator::driver::{BlockStatus, BlockTrace, CalibReport};
+
+use crate::coordinator::driver::{
+    run_guarded, BlockCtx, BlockOptimizer, BlockOutcome, GuardedIter, IterFailure,
+    ReconstructionDriver,
+};
+use crate::coordinator::pipeline::CalibSet;
 use crate::coordinator::schedule::Schedule;
 use crate::model::{BlockView, Params, LINEAR_NAMES};
 use crate::quant::{
-    self, dequant_codes, dst_effective_scale, hard_codes, minmax_scale, nu_init,
-    w_floor, ClipFactors, QParams, QuantConfig, SAT_NU,
+    self, dst_effective_scale, hard_codes, minmax_scale, nu_init, w_floor, ClipFactors,
+    QParams, QuantConfig, SAT_NU,
 };
-use crate::robust::checkpoint::fnv1a64;
-use crate::robust::{
-    with_retry, BlockCheckpoint, CheckpointStore, LossHealth, RobustConfig, Sentinel,
-    KILL_MARKER,
-};
+use crate::robust::{with_retry, LossHealth, RobustConfig, Sentinel};
 use crate::runtime::{Artifact, Engine};
 use crate::tensor::Tensor;
 
@@ -72,48 +71,6 @@ impl TesseraqConfig {
     /// Fast preset for tests/CI.
     pub fn fast(qcfg: QuantConfig) -> Self {
         TesseraqConfig { iterations: 4, steps_per_iter: 8, ..Self::standard(qcfg) }
-    }
-}
-
-/// How a block's final codes were produced.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum BlockStatus {
-    /// Full PAR/DST optimization ran to completion.
-    Optimized,
-    /// The resilience layer degraded this block to hardened RTN (sentinel
-    /// retry budget exhausted, or no PAR step path available).
-    RtnFallback,
-}
-
-/// Per-block calibration record (Fig. 4 traces + Table 7 flip stats).
-#[derive(Debug, Clone, PartialEq)]
-pub struct BlockTrace {
-    pub layer: usize,
-    /// reconstruction MSE after each soften step
-    pub losses: Vec<f32>,
-    /// per linear: (flipped vs RTN, total rounding variables)
-    pub flips: BTreeMap<String, (usize, usize)>,
-    /// loss right before any optimization (RTN-equivalent start)
-    pub initial_loss: f32,
-    pub status: BlockStatus,
-}
-
-pub struct CalibReport {
-    pub per_block: Vec<BlockTrace>,
-    /// per block, per linear: final integer codes + effective dequant
-    /// params (s_eff = 2*sigmoid(v)*s) — ready for packing/serving.
-    pub quantized: Vec<BTreeMap<String, (Vec<u16>, QParams)>>,
-    pub wall_s: f64,
-}
-
-impl CalibReport {
-    /// Blocks the resilience layer degraded to RTN.
-    pub fn fallback_blocks(&self) -> Vec<usize> {
-        self.per_block
-            .iter()
-            .filter(|t| t.status == BlockStatus::RtnFallback)
-            .map(|t| t.layer)
-            .collect()
     }
 }
 
@@ -174,7 +131,8 @@ pub fn calibrate_tesseraq(
     )
 }
 
-/// Fault-tolerant TesseraQ calibration. `eng = None` runs entirely on the
+/// Fault-tolerant TesseraQ calibration through the unified
+/// [`ReconstructionDriver`]. `eng = None` runs entirely on the
 /// host-forward path (every block degrades to hardened RTN — no PAR step
 /// artifact), which is also what a run with a persistently failing device
 /// converges to.
@@ -187,159 +145,166 @@ pub fn calibrate_tesseraq_robust(
     tcfg: &TesseraqConfig,
     robust: &RobustConfig,
 ) -> Result<CalibReport> {
-    let t0 = std::time::Instant::now();
+    // Driver first: it arms the fault plan on the engine before any
+    // artifact compile, so compile@ faults reach the optimizer too.
+    let driver = ReconstructionDriver::new(eng, robust);
     let size = params.cfg.name.clone();
-    let scheme = tcfg.qcfg.scheme.tag();
-    if let (Some(e), Some(plan)) = (eng, &robust.faults) {
-        e.set_fault_plan(Some(plan.clone()));
-    }
+    let mut opt = ParOptimizer::new(eng, &size, tcfg, clips, n_seq, robust)?;
+    driver.run(params, &mut opt, tokens, n_seq)
+}
 
-    let backend = ForwardBackend::new(eng, &params.cfg, &size, &robust.retry);
+/// TesseraQ (PAR + DST) as a [`BlockOptimizer`].
+pub struct ParOptimizer<'a> {
+    tcfg: &'a TesseraqConfig,
+    clips: Option<&'a [BlockClips]>,
+    /// PAR soften-step artifact; unavailable -> hardened RTN per block.
+    step_art: Option<Rc<Artifact>>,
+    batch: usize,
+}
 
-    // PAR soften-step artifact; unavailable -> hardened RTN per block.
-    let step_art = eng.and_then(|e| {
-        let name = format!("block_par_step.{size}.{scheme}{}", tcfg.artifact_suffix);
-        match with_retry(&robust.retry, &format!("compiling {name}"), || e.artifact(&name)) {
-            Ok(a) => Some(a),
-            Err(err) => {
-                eprintln!(
-                    "[robust] PAR step artifact unavailable; \
-                     degrading to hardened RTN per block: {err:#}"
-                );
-                None
+impl<'a> ParOptimizer<'a> {
+    pub fn new(
+        eng: Option<&Engine>,
+        size: &str,
+        tcfg: &'a TesseraqConfig,
+        clips: Option<&'a [BlockClips]>,
+        n_seq: usize,
+        robust: &RobustConfig,
+    ) -> Result<ParOptimizer<'a>> {
+        let scheme = tcfg.qcfg.scheme.tag();
+        let step_art = eng.and_then(|e| {
+            let name = format!("block_par_step.{size}.{scheme}{}", tcfg.artifact_suffix);
+            match with_retry(&robust.retry, &format!("compiling {name}"), || e.artifact(&name)) {
+                Ok(a) => Some(a),
+                Err(err) => {
+                    eprintln!(
+                        "[robust] PAR step artifact unavailable; \
+                         degrading to hardened RTN per block: {err:#}"
+                    );
+                    None
+                }
             }
+        });
+        let batch = step_art.as_ref().map_or(1, |a| a.spec.meta.batch.unwrap_or(4));
+        if step_art.is_some() {
+            ensure!(n_seq % batch == 0, "n_seq {n_seq} not divisible by batch {batch}");
         }
-    });
-    let batch = step_art.as_ref().map_or(1, |a| a.spec.meta.batch.unwrap_or(4));
-    if step_art.is_some() {
-        ensure!(n_seq % batch == 0, "n_seq {n_seq} not divisible by batch {batch}");
+        Ok(ParOptimizer { tcfg, clips, step_art, batch })
+    }
+}
+
+impl BlockOptimizer for ParOptimizer<'_> {
+    fn method_tag(&self) -> &'static str {
+        "tesseraq"
     }
 
-    let qmax_w = tcfg.qcfg.qmax_w();
-    let qmax_act = tcfg.qcfg.qmax_act();
-    let n_layers = params.cfg.n_layers;
+    fn config_string(&self) -> String {
+        let t = self.tcfg;
+        format!(
+            "quant={};iters={};steps={};lr={};schedule={:?};par={};dst={};prop={};suffix={}",
+            t.qcfg.label(),
+            t.iterations,
+            t.steps_per_iter,
+            t.lr,
+            t.schedule,
+            t.enable_par,
+            t.enable_dst,
+            t.propagate_act_quant,
+            t.artifact_suffix,
+        )
+    }
 
-    // Checkpoint store; resume restores the valid contiguous prefix.
-    let fingerprint = config_fingerprint(params, tcfg, tokens, n_seq);
-    let store = match &robust.checkpoint_dir {
-        Some(dir) => Some(CheckpointStore::new(dir, fingerprint)?),
-        None => None,
-    };
-    let mut per_block: Vec<BlockTrace> = Vec::new();
-    let mut quantized: Vec<BTreeMap<String, (Vec<u16>, QParams)>> = Vec::new();
-    if let Some(store) = &store {
-        if robust.resume {
-            for ckpt in store.load_prefix(n_layers) {
-                merge_block(params, ckpt.trace.layer, &ckpt.quantized);
-                per_block.push(ckpt.trace);
-                quantized.push(ckpt.quantized);
+    fn needs_teacher(&self) -> bool {
+        // Without a step path every block degrades to hardened RTN and
+        // the teacher forward would be wasted work.
+        self.step_art.is_some()
+    }
+
+    fn propagate_qmax(&self) -> f32 {
+        if self.tcfg.propagate_act_quant {
+            self.tcfg.qcfg.qmax_act()
+        } else {
+            quant::A16_SENTINEL
+        }
+    }
+
+    fn optimize_block(&mut self, ctx: &BlockCtx, bw: &BlockView) -> Result<BlockOutcome> {
+        let tcfg = self.tcfg;
+        let qmax_w = tcfg.qcfg.qmax_w();
+        let qmax_act = tcfg.qcfg.qmax_act();
+        let l = ctx.layer;
+        let mut states = init_states(bw, self.clips, l, tcfg, qmax_w);
+        let mut trace = BlockTrace {
+            layer: l,
+            losses: Vec::new(),
+            flips: BTreeMap::new(),
+            initial_loss: f32::NAN,
+            status: BlockStatus::Optimized,
+        };
+
+        let mut fallback_reason: Option<String> = None;
+        match (ctx.eng, &self.step_art, ctx.teacher) {
+            (Some(eng), Some(art), Some(teacher)) => {
+                // per-block constants live on device for the whole PAR loop
+                match BlockConstBufs::new(eng, &bw.norm1, &bw.norm2, &states, qmax_w, qmax_act)
+                {
+                    Err(e) => {
+                        fallback_reason = Some(format!("uploading block constants: {e:#}"))
+                    }
+                    Ok(consts) => {
+                        let mut par = ParLoop {
+                            eng,
+                            art: art.as_ref(),
+                            consts: &consts,
+                            set: ctx.set,
+                            teacher,
+                            batch: self.batch,
+                            tcfg,
+                            robust: ctx.robust,
+                            layer: l,
+                            states: &mut states,
+                            trace: &mut trace,
+                            t_global: 0,
+                        };
+                        fallback_reason =
+                            run_guarded(&mut par, l, tcfg.iterations, ctx.robust.sentinel)?;
+                    }
+                }
             }
-            if !per_block.is_empty() {
-                eprintln!(
-                    "[robust] resuming: {}/{} blocks restored from {}",
-                    per_block.len(),
-                    n_layers,
-                    store.dir().display()
-                );
+            _ => fallback_reason = Some("no PAR step path available".to_string()),
+        }
+
+        let mut quantized = BTreeMap::new();
+        if let Some(reason) = fallback_reason {
+            eprintln!("[robust] block {l}: hardened-RTN fallback ({reason})");
+            trace.losses.clear();
+            trace.initial_loss = 0.0;
+            trace.status = BlockStatus::RtnFallback;
+            for name in LINEAR_NAMES {
+                let s = &states[name];
+                let w = &bw.linears[name];
+                let codes = quant::rtn_codes(w, &s.qp, qmax_w);
+                trace.flips.insert(name.to_string(), (0, codes.len()));
+                quantized.insert(name.to_string(), (codes, s.qp.clone()));
             }
         } else {
-            store.clear()?;
+            for name in LINEAR_NAMES {
+                let s = &states[name];
+                let w_orig = &bw.linears[name];
+                trace.flips.insert(
+                    name.to_string(),
+                    (quant::count_flips(w_orig, &s.nu, &s.qp), s.nu.data.len()),
+                );
+                let codes = hard_codes(&s.wf, &s.nu, &s.qp, qmax_w);
+                let qp_eff = if tcfg.enable_dst {
+                    dst_effective_scale(&s.qp, &s.v)
+                } else {
+                    s.qp.clone()
+                };
+                quantized.insert(name.to_string(), (codes, qp_eff));
+            }
         }
-    }
-    let start_block = per_block.len();
-
-    let mut set = CalibSet::from_tokens(params, tokens, n_seq);
-    let prop_qmax = if tcfg.propagate_act_quant { qmax_act } else { quant::A16_SENTINEL };
-    // Rebuild the residual stream through the restored (already merged)
-    // prefix — the same f32 ops as the original pass, so a resumed run
-    // reproduces the interrupted run bit for bit.
-    for l in 0..start_block {
-        let bw_q = params.block(l);
-        set.x = backend.forward_all(&bw_q, &set, prop_qmax)?;
-    }
-
-    for l in start_block..n_layers {
-        let (trace, qblock) = calibrate_block(
-            eng,
-            step_art.as_deref(),
-            &backend,
-            params,
-            clips,
-            &set,
-            l,
-            batch,
-            tcfg,
-            robust,
-            qmax_w,
-            qmax_act,
-        )?;
-        merge_block(params, l, &qblock);
-        if let Some(store) = &store {
-            store.save_block(
-                l,
-                &BlockCheckpoint { trace: trace.clone(), quantized: qblock.clone() },
-            )?;
-        }
-        per_block.push(trace);
-        quantized.push(qblock);
-        if robust.faults.as_ref().is_some_and(|f| f.kill_after_block(l)) {
-            bail!("{KILL_MARKER} after block {l}");
-        }
-        // propagate the stream through the merged quantized block
-        let bw_q = params.block(l);
-        set.x = backend.forward_all(&bw_q, &set, prop_qmax)?;
-    }
-
-    Ok(CalibReport { per_block, quantized, wall_s: t0.elapsed().as_secs_f64() })
-}
-
-/// Hash of everything that determines a calibration run's outputs: the
-/// checkpoint format version, model/quant/schedule configuration, the
-/// calibration tokens, and the (embedding) weights. Stored in every block
-/// checkpoint; a mismatch refuses resume.
-fn config_fingerprint(
-    params: &Params,
-    tcfg: &TesseraqConfig,
-    tokens: &[i32],
-    n_seq: usize,
-) -> u64 {
-    let mut bytes = format!(
-        "v{};model={};quant={};iters={};steps={};lr={};schedule={:?};par={};dst={};prop={};suffix={};n_seq={}",
-        crate::robust::checkpoint::VERSION,
-        params.cfg.name,
-        tcfg.qcfg.label(),
-        tcfg.iterations,
-        tcfg.steps_per_iter,
-        tcfg.lr,
-        tcfg.schedule,
-        tcfg.enable_par,
-        tcfg.enable_dst,
-        tcfg.propagate_act_quant,
-        tcfg.artifact_suffix,
-        n_seq,
-    )
-    .into_bytes();
-    for &t in tokens {
-        bytes.extend_from_slice(&t.to_le_bytes());
-    }
-    // cheap weight identity: the embedding table's raw bits
-    for &v in &params.get("emb").data {
-        bytes.extend_from_slice(&v.to_le_bytes());
-    }
-    fnv1a64(&bytes)
-}
-
-/// Merge one block's final codes into the model (fake-quant weights).
-fn merge_block(
-    params: &mut Params,
-    layer: usize,
-    qblock: &BTreeMap<String, (Vec<u16>, QParams)>,
-) {
-    for (name, (codes, qp)) in qblock {
-        let o = qp.s.shape[0];
-        let i = codes.len() / o;
-        let wq = dequant_codes(codes, o, i, qp);
-        params.set_block_linear(layer, name, &wq);
+        Ok(BlockOutcome { trace, quantized, extras: BTreeMap::new() })
     }
 }
 
@@ -373,94 +338,6 @@ fn init_states(
         states.insert(name.to_string(), LinearState::init(w, qp, !tcfg.enable_par));
     }
     states
-}
-
-/// Calibrate one block: PAR/DST when the device path is up, hardened RTN
-/// otherwise. Returns the block trace and the final (codes, QParams) map;
-/// the caller merges them into the model.
-fn calibrate_block(
-    eng: Option<&Engine>,
-    step_art: Option<&Artifact>,
-    backend: &ForwardBackend,
-    params: &Params,
-    clips: Option<&[BlockClips]>,
-    set: &CalibSet,
-    l: usize,
-    batch: usize,
-    tcfg: &TesseraqConfig,
-    robust: &RobustConfig,
-    qmax_w: f32,
-    qmax_act: f32,
-) -> Result<(BlockTrace, BTreeMap<String, (Vec<u16>, QParams)>)> {
-    let bw = params.block(l);
-    let mut states = init_states(&bw, clips, l, tcfg, qmax_w);
-    let mut trace = BlockTrace {
-        layer: l,
-        losses: Vec::new(),
-        flips: BTreeMap::new(),
-        initial_loss: f32::NAN,
-        status: BlockStatus::Optimized,
-    };
-
-    let mut fallback_reason: Option<String> = None;
-    match (eng, step_art) {
-        (Some(e), Some(art)) => {
-            match run_par_loop(
-                e, art, backend, &bw, set, l, batch, tcfg, robust, &mut states, &mut trace,
-                qmax_w, qmax_act,
-            )? {
-                ParOutcome::Done => {}
-                ParOutcome::Fallback(reason) => fallback_reason = Some(reason),
-            }
-        }
-        _ => fallback_reason = Some("no PAR step path available".to_string()),
-    }
-
-    let mut qblock = BTreeMap::new();
-    if let Some(reason) = fallback_reason {
-        eprintln!("[robust] block {l}: hardened-RTN fallback ({reason})");
-        trace.losses.clear();
-        trace.initial_loss = 0.0;
-        trace.status = BlockStatus::RtnFallback;
-        for name in LINEAR_NAMES {
-            let s = &states[name];
-            let w = &bw.linears[name];
-            let codes = quant::rtn_codes(w, &s.qp, qmax_w);
-            trace.flips.insert(name.to_string(), (0, codes.len()));
-            qblock.insert(name.to_string(), (codes, s.qp.clone()));
-        }
-    } else {
-        for name in LINEAR_NAMES {
-            let s = &states[name];
-            let w_orig = &bw.linears[name];
-            trace.flips.insert(
-                name.to_string(),
-                (quant::count_flips(w_orig, &s.nu, &s.qp), s.nu.data.len()),
-            );
-            let codes = hard_codes(&s.wf, &s.nu, &s.qp, qmax_w);
-            let qp_eff = if tcfg.enable_dst {
-                dst_effective_scale(&s.qp, &s.v)
-            } else {
-                s.qp.clone()
-            };
-            qblock.insert(name.to_string(), (codes, qp_eff));
-        }
-    }
-    Ok((trace, qblock))
-}
-
-enum ParOutcome {
-    Done,
-    /// Degrade this block to hardened RTN, with the reason for the log.
-    Fallback(String),
-}
-
-enum StepFailure {
-    /// Device execution kept failing after retries — not recoverable by
-    /// rollback, degrade the block.
-    Exec(String),
-    /// NaN/Inf/diverged loss — recoverable by rollback + LR backoff.
-    Numeric(String),
 }
 
 /// Iteration-start snapshot of everything `par_step` mutates, so a bad
@@ -525,116 +402,93 @@ impl ParSnapshot {
     }
 }
 
-fn run_par_loop(
-    eng: &Engine,
-    step_art: &Artifact,
-    backend: &ForwardBackend,
-    bw: &BlockView,
-    set: &CalibSet,
-    l: usize,
+/// One PAR block's sentinel-guarded loop: each [`GuardedIter::iteration`]
+/// hardens per the schedule, then runs `steps_per_iter` soften steps.
+struct ParLoop<'a> {
+    eng: &'a Engine,
+    art: &'a Artifact,
+    consts: &'a BlockConstBufs,
+    set: &'a CalibSet,
+    teacher: &'a Tensor,
     batch: usize,
-    tcfg: &TesseraqConfig,
-    robust: &RobustConfig,
-    states: &mut BTreeMap<String, LinearState>,
-    trace: &mut BlockTrace,
-    qmax_w: f32,
-    qmax_act: f32,
-) -> Result<ParOutcome> {
-    // teacher target on the (quantized-prefix) stream, FP weights
-    let y_all = backend.forward_all(bw, set, quant::A16_SENTINEL)?;
+    tcfg: &'a TesseraqConfig,
+    robust: &'a RobustConfig,
+    layer: usize,
+    states: &'a mut BTreeMap<String, LinearState>,
+    trace: &'a mut BlockTrace,
+    t_global: u32,
+}
 
-    // per-block constants live on device for the whole PAR loop
-    let consts = match BlockConstBufs::new(eng, &bw.norm1, &bw.norm2, states, qmax_w, qmax_act)
-    {
-        Ok(c) => c,
-        Err(e) => return Ok(ParOutcome::Fallback(format!("uploading block constants: {e:#}"))),
-    };
+impl GuardedIter for ParLoop<'_> {
+    type Snap = ParSnapshot;
 
-    let mut sentinel = Sentinel::new(robust.sentinel);
-    let mut t_global = 0u32;
-    let mut k = 1;
-    while k <= tcfg.iterations {
-        let snap = ParSnapshot::take(states, t_global, trace);
-        if tcfg.enable_par {
-            let total_vars: usize = states.values().map(|s| s.nu.data.len()).sum();
-            let soft = tcfg.schedule.soft_rate(k, tcfg.iterations);
+    fn snapshot(&self) -> ParSnapshot {
+        ParSnapshot::take(self.states, self.t_global, self.trace)
+    }
+
+    fn restore(&mut self, snap: &ParSnapshot) {
+        snap.restore(self.states, &mut self.t_global, self.trace);
+    }
+
+    fn iteration(&mut self, k: usize, sentinel: &mut Sentinel) -> Result<Option<IterFailure>> {
+        if self.tcfg.enable_par {
+            let total_vars: usize = self.states.values().map(|s| s.nu.data.len()).sum();
+            let soft = self.tcfg.schedule.soft_rate(k, self.tcfg.iterations);
             let target_hard = total_vars - (soft * total_vars as f32).ceil() as usize;
-            harden(states, target_hard);
+            harden(self.states, target_hard);
         }
-        let mut failure: Option<StepFailure> = None;
-        for _ in 0..tcfg.steps_per_iter {
-            t_global += 1;
-            let bi = (t_global - 1) as usize;
-            let xb = set.batch(bi, batch);
-            let per = set.t * set.d * batch;
-            let start = (bi % set.n_batches(batch)) * per;
-            let yb = Tensor::new(
-                vec![batch, set.t, set.d],
-                y_all.data[start..start + per].to_vec(),
-            );
-            let lr = tcfg.lr * sentinel.lr_scale;
-            let step_res = with_retry(&robust.retry, "PAR step", || {
-                par_step(eng, step_art, &xb, &yb, &consts, states, lr, t_global as f32)
+        for _ in 0..self.tcfg.steps_per_iter {
+            self.t_global += 1;
+            let bi = (self.t_global - 1) as usize;
+            let xb = self.set.wrapping_batch(bi, self.batch);
+            let yb = self.set.wrapping_slice(self.teacher, bi, self.batch);
+            let lr = self.tcfg.lr * sentinel.lr_scale;
+            let t = self.t_global as f32;
+            let eng = self.eng;
+            let art = self.art;
+            let consts = self.consts;
+            let states = &mut *self.states;
+            let step_res = with_retry(&self.robust.retry, "PAR step", || {
+                par_step(eng, art, &xb, &yb, consts, &mut *states, lr, t)
             });
             let mut loss = match step_res {
                 Ok(loss) => loss,
-                Err(e) => {
-                    failure = Some(StepFailure::Exec(format!("{e:#}")));
-                    break;
-                }
+                Err(e) => return Ok(Some(IterFailure::Exec(format!("{e:#}")))),
             };
-            if robust.faults.as_ref().is_some_and(|f| f.nan_loss(l, t_global as usize)) {
+            if self
+                .robust
+                .faults
+                .as_ref()
+                .is_some_and(|f| f.nan_loss(self.layer, self.t_global as usize))
+            {
                 loss = f32::NAN;
             }
             match sentinel.observe(loss) {
                 LossHealth::Ok => {
-                    if trace.initial_loss.is_nan() {
-                        trace.initial_loss = loss;
+                    if self.trace.initial_loss.is_nan() {
+                        self.trace.initial_loss = loss;
                     }
-                    if !tcfg.enable_dst {
-                        for s in states.values_mut() {
+                    if !self.tcfg.enable_dst {
+                        for s in self.states.values_mut() {
                             s.v = Tensor::zeros(&s.v.shape);
                             s.m_v = Tensor::zeros(&s.v.shape);
                             s.u_v = Tensor::zeros(&s.v.shape);
                         }
                     }
-                    trace.losses.push(loss);
+                    self.trace.losses.push(loss);
                 }
                 LossHealth::NonFinite => {
-                    failure = Some(StepFailure::Numeric(format!("non-finite loss {loss}")));
-                    break;
+                    return Ok(Some(IterFailure::Numeric(format!("non-finite loss {loss}"))));
                 }
                 LossHealth::Diverged { baseline } => {
-                    failure = Some(StepFailure::Numeric(format!(
+                    return Ok(Some(IterFailure::Numeric(format!(
                         "loss {loss:.3e} diverged (baseline {baseline:.3e})"
-                    )));
-                    break;
+                    ))));
                 }
             }
         }
-        match failure {
-            None => k += 1,
-            Some(StepFailure::Exec(reason)) => {
-                return Ok(ParOutcome::Fallback(format!("PAR step execution: {reason}")));
-            }
-            Some(StepFailure::Numeric(reason)) => match sentinel.trip() {
-                Some(scale) => {
-                    eprintln!(
-                        "[robust] block {l} iteration {k}: {reason}; rolling back to the \
-                         iteration-start snapshot, retrying with lr scale {scale}"
-                    );
-                    snap.restore(states, &mut t_global, trace);
-                }
-                None => {
-                    return Ok(ParOutcome::Fallback(format!(
-                        "{reason} after {} rollbacks",
-                        sentinel.retries_used()
-                    )));
-                }
-            },
-        }
+        Ok(None)
     }
-    Ok(ParOutcome::Done)
 }
 
 /// Harden phase: pool HS(nu) = |sigmoid(nu) - 0.5| across all linears of
@@ -878,20 +732,16 @@ mod tests {
     }
 
     #[test]
-    fn fingerprint_tracks_config_and_data() {
-        let cfg = crate::model::ModelConfig::preset("nano").unwrap();
-        let mut rng = crate::tensor::Pcg32::seeded(0);
-        let p = Params::init(&cfg, &mut rng);
+    fn par_optimizer_config_string_tracks_knobs() {
         let qcfg = QuantConfig::weight_only(2, crate::quant::GroupScheme::Group(32));
         let tcfg = TesseraqConfig::fast(qcfg);
-        let tokens: Vec<i32> = (0..64).map(|i| i % 100).collect();
-        let a = config_fingerprint(&p, &tcfg, &tokens, 4);
-        assert_eq!(a, config_fingerprint(&p, &tcfg, &tokens, 4), "deterministic");
+        let robust = RobustConfig::disabled();
+        let a = ParOptimizer::new(None, "nano", &tcfg, None, 4, &robust).unwrap();
         let mut t2 = tcfg.clone();
         t2.lr *= 2.0;
-        assert_ne!(a, config_fingerprint(&p, &t2, &tokens, 4), "lr changes fingerprint");
-        let mut tok2 = tokens.clone();
-        tok2[0] += 1;
-        assert_ne!(a, config_fingerprint(&p, &tcfg, &tok2, 4), "tokens change fingerprint");
+        let b = ParOptimizer::new(None, "nano", &t2, None, 4, &robust).unwrap();
+        assert_eq!(a.method_tag(), "tesseraq");
+        assert_ne!(a.config_string(), b.config_string(), "lr changes config string");
+        assert!(!a.needs_teacher(), "no step artifact -> no teacher needed");
     }
 }

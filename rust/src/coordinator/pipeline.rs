@@ -22,36 +22,60 @@ pub struct CalibSet {
 }
 
 impl CalibSet {
-    pub fn from_tokens(params: &Params, tokens: &[i32], n_seq: usize) -> CalibSet {
+    pub fn from_tokens(params: &Params, tokens: &[i32], n_seq: usize) -> Result<CalibSet> {
         let cfg = &params.cfg;
         let t = cfg.max_seq;
-        ensure_eq(tokens.len(), n_seq * t);
-        CalibSet { n_seq, t, d: cfg.d_model, x: params.embed(tokens, n_seq, t) }
+        ensure!(
+            tokens.len() == n_seq * t,
+            "calibration token count mismatch: {} tokens for {n_seq} sequences x {t} max_seq",
+            tokens.len()
+        );
+        Ok(CalibSet { n_seq, t, d: cfg.d_model, x: params.embed(tokens, n_seq, t) })
     }
 
-    /// The i-th batch of size b, [b, t, d].
-    pub fn batch(&self, i: usize, b: usize) -> Tensor {
+    /// The i-th batch of size b, [b, t, d]; errors past the end.
+    pub fn batch(&self, i: usize, b: usize) -> Result<Tensor> {
+        ensure!(
+            i < self.n_batches(b),
+            "batch index {i} out of range ({} batches of {b} over {} sequences)",
+            self.n_batches(b),
+            self.n_seq
+        );
+        Ok(self.wrapping_slice(&self.x, i, b))
+    }
+
+    /// The (i mod n_batches)-th batch — for optimizer step loops that
+    /// deliberately cycle through the calibration set.
+    pub fn wrapping_batch(&self, i: usize, b: usize) -> Tensor {
+        self.wrapping_slice(&self.x, i, b)
+    }
+
+    /// Slice the (i mod n_batches)-th batch out of `y`, any stream-shaped
+    /// [n_seq, t, d] tensor (e.g. teacher targets aligned with `x`).
+    pub fn wrapping_slice(&self, y: &Tensor, i: usize, b: usize) -> Tensor {
+        assert!(b > 0 && self.n_seq % b == 0, "batch {b} must divide n_seq {}", self.n_seq);
         let per = self.t * self.d;
-        let n_batches = self.n_seq / b;
-        let idx = i % n_batches;
+        let idx = i % self.n_batches(b);
         let start = idx * b * per;
-        Tensor::new(vec![b, self.t, self.d], self.x.data[start..start + b * per].to_vec())
+        Tensor::new(vec![b, self.t, self.d], y.data[start..start + b * per].to_vec())
     }
 
     pub fn n_batches(&self, b: usize) -> usize {
         self.n_seq / b
     }
 
-    pub fn write_batch(&mut self, i: usize, b: usize, y: &Tensor) {
+    pub fn write_batch(&mut self, i: usize, b: usize, y: &Tensor) -> Result<()> {
+        ensure!(
+            i < self.n_batches(b),
+            "batch index {i} out of range ({} batches of {b} over {} sequences)",
+            self.n_batches(b),
+            self.n_seq
+        );
         let per = self.t * self.d;
-        let idx = i % (self.n_seq / b);
-        let start = idx * b * per;
+        let start = i * b * per;
         self.x.data[start..start + b * per].copy_from_slice(&y.data);
+        Ok(())
     }
-}
-
-fn ensure_eq(a: usize, b: usize) {
-    assert_eq!(a, b, "calibration token count mismatch");
 }
 
 /// Drives `block_fp_fwd.<size>` over a calibration set in artifact-sized
@@ -79,7 +103,7 @@ impl<'e> BlockRunner<'e> {
         let mut out = Tensor::zeros(&set.x.shape);
         let per = set.t * set.d * self.batch;
         for i in 0..set.n_batches(self.batch) {
-            let xb = set.batch(i, self.batch);
+            let xb = set.batch(i, self.batch)?;
             let yb = self.forward_batch(bw, &xb, qmax_act)?;
             out.data[i * per..(i + 1) * per].copy_from_slice(&yb.data);
         }

@@ -6,13 +6,12 @@
 use anyhow::Result;
 
 use crate::baselines::awq::{awq_transform, quantize_with_clips};
-use crate::baselines::gptq::gptq_linear;
-use crate::coordinator::lwc::{calibrate_lwc, LwcConfig};
-use crate::coordinator::par::{calibrate_tesseraq_robust, CalibReport, TesseraqConfig};
+use crate::coordinator::driver::{CalibReport, GptqOptimizer, ReconstructionDriver};
+use crate::coordinator::lwc::{calibrate_lwc_robust, LwcConfig};
+use crate::coordinator::par::{calibrate_tesseraq_robust, TesseraqConfig};
 use crate::coordinator::Schedule;
 use crate::robust::RobustConfig;
 use crate::data::Corpus;
-use crate::model::hostfwd::{block_fwd, tap_for_linear, BlockFwdOpts};
 use crate::model::Params;
 use crate::quant::rotate::rotate_model;
 use crate::quant::smooth::smoothquant;
@@ -114,24 +113,21 @@ pub fn rtn_model(params: &mut Params, qcfg: &QuantConfig) {
     }
 }
 
-/// GPTQ block-by-block with quantized-prefix propagation (host).
-pub fn gptq_model(params: &mut Params, tokens: &[i32], n_seq: usize, qcfg: &QuantConfig) {
-    let cfg = params.cfg.clone();
-    let mut x = params.embed(tokens, n_seq, cfg.max_seq);
-    let act_qmax =
-        if qcfg.act_bits.is_some() { Some(qcfg.qmax_act()) } else { None };
-    for l in 0..cfg.n_layers {
-        let opts = BlockFwdOpts { act_qmax, collect: true };
-        let (_, taps) = block_fwd(&x, &params.block(l), &cfg, &opts);
-        for (name, _) in cfg.linear_shapes() {
-            let w = params.get(name).index0(l);
-            let tap = &taps[tap_for_linear(name)];
-            let out = gptq_linear(&w, tap, qcfg, 0.01);
-            params.set_block_linear(l, name, &out.wq);
-        }
-        let opts2 = BlockFwdOpts { act_qmax, collect: false };
-        x = block_fwd(&x, &params.block(l), &cfg, &opts2).0;
-    }
+/// GPTQ block-by-block with quantized-prefix propagation, through the
+/// unified [`ReconstructionDriver`] (checkpoint/resume, retry, fault
+/// injection). The GPTQ math itself stays host-side; `eng` only speeds
+/// up the block forwards.
+pub fn gptq_model(
+    eng: Option<&Engine>,
+    params: &mut Params,
+    tokens: &[i32],
+    n_seq: usize,
+    qcfg: &QuantConfig,
+    robust: &RobustConfig,
+) -> Result<CalibReport> {
+    let driver = ReconstructionDriver::new(eng, robust);
+    let mut opt = GptqOptimizer::new(*qcfg);
+    driver.run(params, &mut opt, tokens, n_seq)
 }
 
 /// Quantize `base` (FP checkpoint) with `method`.
@@ -153,13 +149,20 @@ pub fn quantize(
     match method {
         Method::Fp16 => {}
         Method::Rtn => rtn_model(&mut params, qcfg),
-        Method::Gptq => gptq_model(&mut params, &tokens, opts.n_seq, qcfg),
+        Method::Gptq => {
+            report = Some(gptq_model(
+                Some(eng), &mut params, &tokens, opts.n_seq, qcfg, &opts.robust,
+            )?);
+        }
         Method::Awq => {
             let res = awq_transform(&mut params, &calib_x(), qcfg, 16, 6);
             quantize_with_clips(&mut params, &res.clips, qcfg);
         }
         Method::OmniQuant => {
-            calibrate_lwc(eng, &mut params, &tokens, opts.n_seq, &opts.lwc)?;
+            let lrep = calibrate_lwc_robust(
+                Some(eng), &mut params, &tokens, opts.n_seq, &opts.lwc, &opts.robust,
+            )?;
+            report = Some(lrep.calib);
         }
         Method::TesseraQ => {
             let res = awq_transform(&mut params, &calib_x(), qcfg, 16, 6);
@@ -174,7 +177,9 @@ pub fn quantize(
             // learn clips on a clone (OmniQuant init), then PAR on the
             // original weights with those clips — the paper's W2A16 recipe
             let mut probe = params.clone();
-            let lrep = calibrate_lwc(eng, &mut probe, &tokens, opts.n_seq, &opts.lwc)?;
+            let lrep = calibrate_lwc_robust(
+                Some(eng), &mut probe, &tokens, opts.n_seq, &opts.lwc, &opts.robust,
+            )?;
             let mut tcfg = opts.tesseraq.clone();
             tcfg.schedule = opts.schedule;
             report = Some(calibrate_tesseraq_robust(
@@ -184,7 +189,9 @@ pub fn quantize(
         }
         Method::GptqOnAwq => {
             awq_transform(&mut params, &calib_x(), qcfg, 16, 6);
-            gptq_model(&mut params, &tokens, opts.n_seq, qcfg);
+            report = Some(gptq_model(
+                Some(eng), &mut params, &tokens, opts.n_seq, qcfg, &opts.robust,
+            )?);
         }
         Method::SmoothQuant => {
             smoothquant(&mut params, &calib_x(), 0.5);
@@ -198,7 +205,9 @@ pub fn quantize(
             head_t = Some(rotate_model(&mut params, R0_SEED));
             // tokens embed must use the ROTATED embedding
             let rtokens = tokens.clone();
-            gptq_model(&mut params, &rtokens, opts.n_seq, qcfg);
+            report = Some(gptq_model(
+                Some(eng), &mut params, &rtokens, opts.n_seq, qcfg, &opts.robust,
+            )?);
         }
         Method::QuaRotTesseraQ => {
             head_t = Some(rotate_model(&mut params, R0_SEED));

@@ -15,17 +15,22 @@ use crate::coordinator::pretrain::{pretrain, PretrainConfig};
 use crate::data::{Corpus, CorpusKind};
 use crate::model::{ModelConfig, Params};
 use crate::report::results_dir;
+use crate::robust::RobustConfig;
 use crate::runtime::Engine;
 use crate::tensor::Pcg32;
 
 pub struct Ctx {
     pub eng: Engine,
     pub fast: bool,
+    /// Resilience knobs threaded into every reconstruction calibration a
+    /// table/figure runs (checkpoint/resume via `--checkpoint-dir` /
+    /// `--resume`, fault injection via `--inject-faults`).
+    pub robust: RobustConfig,
 }
 
 impl Ctx {
     pub fn new(fast: bool) -> Result<Ctx> {
-        Ok(Ctx { eng: Engine::from_default_dir()?, fast })
+        Ok(Ctx { eng: Engine::from_default_dir()?, fast, robust: RobustConfig::default() })
     }
 
     /// Pretraining steps per model size (fast mode trains less).

@@ -81,7 +81,8 @@ fn run_method(
     calib: &Corpus,
 ) -> Result<Quantized> {
     eprintln!("[{}] {} ...", qcfg.label(), method.label());
-    let opts = MethodOpts::new(*qcfg, ctx.n_calib(), ctx.fast);
+    let mut opts = MethodOpts::new(*qcfg, ctx.n_calib(), ctx.fast);
+    opts.robust = ctx.robust.clone();
     quantize(&ctx.eng, base, method, qcfg, calib, &opts)
 }
 
@@ -303,6 +304,7 @@ fn table5(ctx: &Ctx) -> Result<()> {
         let calib = ctx.corpus(kind, size)?;
         for &(n_seq, bs, suffix) in &sample_sets {
             let mut opts = MethodOpts::new(qcfg, n_seq, ctx.fast);
+            opts.robust = ctx.robust.clone();
             opts.tesseraq.artifact_suffix = suffix.to_string();
             eprintln!("[table5] {} n={} bs={}", kind.name(), n_seq, bs);
             let q = quantize(&ctx.eng, &base, Method::TesseraQ, &qcfg, &calib, &opts)?;
@@ -334,6 +336,7 @@ fn table6(ctx: &Ctx) -> Result<()> {
             run_method(ctx, &base, Method::Awq, &qcfg, &calib)?
         } else {
             let mut opts = MethodOpts::new(qcfg, ctx.n_calib(), ctx.fast);
+            opts.robust = ctx.robust.clone();
             opts.tesseraq.enable_par = par;
             opts.tesseraq.enable_dst = dst;
             quantize(&ctx.eng, &base, Method::TesseraQ, &qcfg, &calib, &opts)?
@@ -531,6 +534,7 @@ fn figure3(ctx: &Ctx) -> Result<()> {
     );
     for sched in schedules {
         let mut opts = MethodOpts::new(qcfg, ctx.n_calib(), ctx.fast);
+        opts.robust = ctx.robust.clone();
         opts.schedule = sched;
         let q = quantize(&ctx.eng, &base, Method::TesseraQ, &qcfg, &calib, &opts)?;
         let e = evaluate(ctx, size, &q, &qcfg, true)?;
@@ -560,14 +564,15 @@ fn figure4(ctx: &Ctx) -> Result<()> {
         6,
     );
     let opts = MethodOpts::new(qcfg, ctx.n_calib(), ctx.fast);
-    let rep_tq = crate::coordinator::par::calibrate_tesseraq(
-        &ctx.eng, &mut p_tq, Some(&res.clips), &tokens, ctx.n_calib(), &opts.tesseraq,
+    let rep_tq = crate::coordinator::par::calibrate_tesseraq_robust(
+        Some(&ctx.eng), &mut p_tq, Some(&res.clips), &tokens, ctx.n_calib(),
+        &opts.tesseraq, &ctx.robust,
     )?;
 
     // OmniQuant-LWC trace on the same init
     let mut p_lwc = base.clone();
-    let rep_lwc = crate::coordinator::lwc::calibrate_lwc(
-        &ctx.eng, &mut p_lwc, &tokens, ctx.n_calib(), &opts.lwc,
+    let rep_lwc = crate::coordinator::lwc::calibrate_lwc_robust(
+        Some(&ctx.eng), &mut p_lwc, &tokens, ctx.n_calib(), &opts.lwc, &ctx.robust,
     )?;
 
     let mut t = Table::new(

@@ -105,6 +105,8 @@ fn robust_opts(args: &Args) -> Result<RobustConfig> {
         let plan = FaultPlan::parse(spec)
             .with_context(|| format!("parsing --inject-faults {spec:?}"))?;
         robust.faults = Some(std::rc::Rc::new(plan));
+    } else {
+        robust.faults = FaultPlan::from_env();
     }
     Ok(robust)
 }
@@ -119,16 +121,19 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&args),
         "table" => {
             let id: u32 = args.positional.get(1).context("table N")?.parse()?;
-            let ctx = Ctx::new(args.fast())?;
+            let mut ctx = Ctx::new(args.fast())?;
+            ctx.robust = robust_opts(&args)?;
             tables::run_table(&ctx, id)
         }
         "figure" => {
             let id: u32 = args.positional.get(1).context("figure N")?.parse()?;
-            let ctx = Ctx::new(args.fast())?;
+            let mut ctx = Ctx::new(args.fast())?;
+            ctx.robust = robust_opts(&args)?;
             tables::run_figure(&ctx, id)
         }
         "all-tables" => {
-            let ctx = Ctx::new(args.fast())?;
+            let mut ctx = Ctx::new(args.fast())?;
+            ctx.robust = robust_opts(&args)?;
             for id in [1, 2, 3, 4, 5, 6, 7, 8, 10, 11] {
                 println!("==== table {id} ====");
                 tables::run_table(&ctx, id)?;
@@ -158,8 +163,9 @@ const HELP: &str = "repro — TesseraQ reproduction launcher
   all-tables [--fast]
   e2e       [--fast]        full train -> quantize -> eval -> serve
 
-resilience (calibrate):
+resilience (calibrate, table, figure, all-tables):
   --checkpoint-dir DIR   persist per-block calibration checkpoints to DIR
+                         (each method/config gets its own subdirectory)
   --resume               resume a partial run from --checkpoint-dir
   --inject-faults SPEC   deterministic faults, e.g.
                          'nan@0.3,compile@block_par_step:2,kill@1'

@@ -23,12 +23,15 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::par::{BlockStatus, BlockTrace};
+use crate::coordinator::driver::{BlockStatus, BlockTrace};
 use crate::quant::QParams;
 use crate::tensor::Tensor;
 
 pub const MAGIC: &[u8; 4] = b"TSQB";
-pub const VERSION: u32 = 1;
+/// v2: payload gained the `extras` section (method-specific side state,
+/// e.g. LWC clip tensors). The version is part of the fingerprint input,
+/// so v1 checkpoints are refused cleanly rather than misdecoded.
+pub const VERSION: u32 = 2;
 
 /// FNV-1a 64-bit — stable, dependency-free config fingerprint.
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
@@ -60,6 +63,9 @@ pub fn crc32(bytes: &[u8]) -> u32 {
 pub struct BlockCheckpoint {
     pub trace: BlockTrace,
     pub quantized: BTreeMap<String, (Vec<u16>, QParams)>,
+    /// Method-specific side state (e.g. the LWC clip-logit tensors) the
+    /// optimizer needs back on resume; empty for methods without any.
+    pub extras: BTreeMap<String, Tensor>,
 }
 
 pub struct CheckpointStore {
@@ -248,6 +254,17 @@ fn encode_payload(ckpt: &BlockCheckpoint) -> Vec<u8> {
             put_f32(&mut b, v);
         }
     }
+    put_u32(&mut b, ckpt.extras.len() as u32);
+    for (name, t) in &ckpt.extras {
+        put_str(&mut b, name);
+        put_u32(&mut b, t.shape.len() as u32);
+        for &d in &t.shape {
+            put_u32(&mut b, d as u32);
+        }
+        for &v in &t.data {
+            put_f32(&mut b, v);
+        }
+    }
     b
 }
 
@@ -348,9 +365,29 @@ fn decode_payload(payload: &[u8]) -> Result<BlockCheckpoint> {
         };
         quantized.insert(name, (codes, qp));
     }
+    let n_extras = r.take_u32()? as usize;
+    let mut extras = BTreeMap::new();
+    for _ in 0..n_extras {
+        let name = r.take_str()?;
+        let rank = r.take_u32()? as usize;
+        if rank > 8 {
+            bail!("extras tensor rank too large ({rank})");
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(r.take_u32()? as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(r.take_f32()?);
+        }
+        extras.insert(name, Tensor::new(shape, data));
+    }
     Ok(BlockCheckpoint {
         trace: BlockTrace { layer, losses, flips, initial_loss, status },
         quantized,
+        extras,
     })
 }
 
@@ -378,6 +415,8 @@ mod tests {
             };
             quantized.insert(name.to_string(), (codes, qp));
         }
+        let mut extras = BTreeMap::new();
+        extras.insert("gm:q_proj".to_string(), Tensor::from_fn(&[4, 2], |j| 4.0 - j as f32 * 0.1));
         BlockCheckpoint {
             trace: BlockTrace {
                 layer,
@@ -387,6 +426,7 @@ mod tests {
                 status: BlockStatus::Optimized,
             },
             quantized,
+            extras,
         }
     }
 

@@ -114,6 +114,14 @@ impl Tensor {
     }
 
     pub fn map(&self, f: impl Fn(f32) -> f32 + Sync) -> Tensor {
+        // Large tensors (block-stream activations, stacked weights) go
+        // through the util thread pool; order is preserved either way.
+        if self.data.len() >= 64 * 1024 {
+            return Tensor {
+                shape: self.shape.clone(),
+                data: crate::util::parallel_map(&self.data, f),
+            };
+        }
         Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
     }
 

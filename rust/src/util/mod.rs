@@ -78,6 +78,46 @@ where
     });
 }
 
+/// Elementwise map over `src` across the thread pool, preserving order.
+/// Falls back to a serial loop when the input is small or only one worker
+/// is configured, so results are identical either way.
+pub fn parallel_map<F>(src: &[f32], f: F) -> Vec<f32>
+where
+    F: Fn(f32) -> f32 + Sync,
+{
+    let n = src.len();
+    let mut out = vec![0.0f32; n];
+    let workers = n_threads().min(n.max(1));
+    if workers <= 1 || n < 64 {
+        for (o, &v) in out.iter_mut().zip(src) {
+            *o = f(v);
+        }
+        return out;
+    }
+    let per = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        let mut rest = out.as_mut_slice();
+        let mut start = 0usize;
+        for _ in 0..workers {
+            let take = per.min(rest.len());
+            if take == 0 {
+                break;
+            }
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let f = &f;
+            let chunk = &src[start..start + take];
+            s.spawn(move || {
+                for (o, &v) in head.iter_mut().zip(chunk) {
+                    *o = f(v);
+                }
+            });
+            start += take;
+        }
+    });
+    out
+}
+
 /// Seeded property-test driver: runs `cases` random cases, reporting the
 /// failing seed so a case can be replayed deterministically.
 pub fn proptest(cases: usize, base_seed: u64, f: impl Fn(&mut crate::tensor::Pcg32)) {
@@ -119,6 +159,19 @@ mod tests {
         for (i, row) in out.chunks(8).enumerate() {
             assert!(row.iter().all(|&v| v == i as f32));
         }
+    }
+
+    #[test]
+    fn parallel_map_matches_serial() {
+        // large enough to take the threaded path, odd length to exercise
+        // the final ragged chunk
+        let src: Vec<f32> = (0..100_001).map(|i| i as f32 * 0.25 - 7.0).collect();
+        let got = parallel_map(&src, |x| x * x + 1.0);
+        for (i, (&g, &s)) in got.iter().zip(&src).enumerate() {
+            assert_eq!(g, s * s + 1.0, "elem {i}");
+        }
+        assert!(parallel_map(&[], |x| x).is_empty());
+        assert_eq!(parallel_map(&[2.0], |x| x * 3.0), vec![6.0]);
     }
 
     #[test]
