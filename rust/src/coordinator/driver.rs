@@ -21,6 +21,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::pipeline::{CalibSet, ForwardBackend};
 use crate::model::{hostfwd, BlockView, Params};
+use crate::obs;
 use crate::quant::{self, dequant_codes, QParams, QuantConfig};
 use crate::robust::checkpoint::fnv1a64;
 use crate::robust::{
@@ -68,6 +69,56 @@ impl CalibReport {
             .filter(|t| t.status == BlockStatus::RtnFallback)
             .map(|t| t.layer)
             .collect()
+    }
+
+    /// Serialize the calibration record (per-block traces, fallback list,
+    /// wall time) as JSON — the machine-readable artifact written next to
+    /// the markdown tables.
+    pub fn to_json(&self) -> String {
+        use crate::util::json::Json;
+        let mut root = BTreeMap::new();
+        root.insert("wall_s".to_string(), Json::Num(self.wall_s));
+        root.insert(
+            "fallback_blocks".to_string(),
+            Json::Arr(self.fallback_blocks().iter().map(|&l| Json::Num(l as f64)).collect()),
+        );
+        let blocks = self
+            .per_block
+            .iter()
+            .map(|t| {
+                let mut b = BTreeMap::new();
+                b.insert("layer".to_string(), Json::Num(t.layer as f64));
+                b.insert(
+                    "status".to_string(),
+                    Json::Str(
+                        match t.status {
+                            BlockStatus::Optimized => "optimized",
+                            BlockStatus::RtnFallback => "rtn_fallback",
+                        }
+                        .to_string(),
+                    ),
+                );
+                b.insert("initial_loss".to_string(), Json::Num(t.initial_loss as f64));
+                b.insert(
+                    "losses".to_string(),
+                    Json::Arr(t.losses.iter().map(|&v| Json::Num(v as f64)).collect()),
+                );
+                let flips = t
+                    .flips
+                    .iter()
+                    .map(|(name, &(moved, total))| {
+                        (
+                            name.clone(),
+                            Json::Arr(vec![Json::Num(moved as f64), Json::Num(total as f64)]),
+                        )
+                    })
+                    .collect();
+                b.insert("flips".to_string(), Json::Obj(flips));
+                Json::Obj(b)
+            })
+            .collect();
+        root.insert("per_block".to_string(), Json::Arr(blocks));
+        Json::Obj(root).dump()
     }
 }
 
@@ -159,6 +210,16 @@ impl<'a> ReconstructionDriver<'a> {
             }
             None => None,
         };
+        obs::run_start(
+            fingerprint,
+            opt.method_tag(),
+            &[
+                ("model", size.as_str().into()),
+                ("n_layers", n_layers.into()),
+                ("n_seq", n_seq.into()),
+                ("resume", self.robust.resume.into()),
+            ],
+        );
 
         let mut per_block: Vec<BlockTrace> = Vec::new();
         let mut quantized: Vec<BTreeMap<String, (Vec<u16>, QParams)>> = Vec::new();
@@ -171,11 +232,18 @@ impl<'a> ReconstructionDriver<'a> {
                     quantized.push(ckpt.quantized);
                 }
                 if !per_block.is_empty() {
-                    eprintln!(
-                        "[robust] resuming: {}/{} blocks restored from {}",
-                        per_block.len(),
-                        n_layers,
-                        store.dir().display()
+                    obs::warn(
+                        "resume",
+                        &format!(
+                            "[robust] resuming: {}/{} blocks restored from {}",
+                            per_block.len(),
+                            n_layers,
+                            store.dir().display()
+                        ),
+                        &[
+                            ("restored", per_block.len().into()),
+                            ("n_layers", n_layers.into()),
+                        ],
                     );
                 }
             } else {
@@ -189,14 +257,20 @@ impl<'a> ReconstructionDriver<'a> {
         // Rebuild the residual stream through the restored (already
         // merged) prefix — the same forward ops as the original pass, so
         // a resumed run reproduces the interrupted run bit for bit.
-        for l in 0..start_block {
-            let bw_q = params.block(l);
-            set.x = backend.forward_all(&bw_q, &set, prop_qmax)?;
+        if start_block > 0 {
+            let _sp = crate::span!("rebuild_prefix", start_block);
+            for l in 0..start_block {
+                let bw_q = params.block(l);
+                set.x = backend.forward_all(&bw_q, &set, prop_qmax)?;
+            }
         }
 
         for l in start_block..n_layers {
+            let _sp_block = crate::span!("block", l);
+            let t_block = Instant::now();
             let bw = params.block(l);
             let teacher = if opt.needs_teacher() {
+                let _sp = crate::span!("teacher");
                 Some(backend.forward_all(&bw, &set, quant::A16_SENTINEL)?)
             } else {
                 None
@@ -209,7 +283,10 @@ impl<'a> ReconstructionDriver<'a> {
                 teacher: teacher.as_ref(),
                 robust: self.robust,
             };
-            let outcome = opt.optimize_block(&ctx, &bw)?;
+            let outcome = {
+                let _sp = crate::span!("optimize");
+                opt.optimize_block(&ctx, &bw)?
+            };
             merge_block(params, l, &outcome.quantized);
             if let Some(store) = &store {
                 store.save_block(
@@ -221,6 +298,28 @@ impl<'a> ReconstructionDriver<'a> {
                     },
                 )?;
             }
+            if obs::enabled() {
+                let t = &outcome.trace;
+                let final_loss = t.losses.last().copied().unwrap_or(t.initial_loss);
+                obs::event(
+                    "block_done",
+                    &[
+                        ("layer", l.into()),
+                        (
+                            "status",
+                            match t.status {
+                                BlockStatus::Optimized => "optimized",
+                                BlockStatus::RtnFallback => "rtn_fallback",
+                            }
+                            .into(),
+                        ),
+                        ("initial_loss", t.initial_loss.into()),
+                        ("final_loss", final_loss.into()),
+                        ("steps", t.losses.len().into()),
+                        ("wall_ms", (t_block.elapsed().as_secs_f64() * 1e3).into()),
+                    ],
+                );
+            }
             per_block.push(outcome.trace);
             quantized.push(outcome.quantized);
             if self.robust.faults.as_ref().is_some_and(|f| f.kill_after_block(l)) {
@@ -228,10 +327,23 @@ impl<'a> ReconstructionDriver<'a> {
             }
             // propagate the stream through the merged quantized block
             let bw_q = params.block(l);
-            set.x = backend.forward_all(&bw_q, &set, prop_qmax)?;
+            set.x = {
+                let _sp = crate::span!("propagate");
+                backend.forward_all(&bw_q, &set, prop_qmax)?
+            };
         }
 
-        Ok(CalibReport { per_block, quantized, wall_s: t0.elapsed().as_secs_f64() })
+        let wall_s = t0.elapsed().as_secs_f64();
+        obs::flush_metrics();
+        obs::event(
+            "run_end",
+            &[
+                ("method", opt.method_tag().into()),
+                ("blocks", per_block.len().into()),
+                ("wall_s", wall_s.into()),
+            ],
+        );
+        Ok(CalibReport { per_block, quantized, wall_s })
     }
 }
 
@@ -325,9 +437,18 @@ pub fn run_guarded<G: GuardedIter>(
             }
             Some(IterFailure::Numeric(reason)) => match sentinel.trip() {
                 Some(scale) => {
-                    eprintln!(
-                        "[robust] block {layer} iteration {k}: {reason}; rolling back to \
-                         the iteration-start snapshot, retrying with lr scale {scale}"
+                    obs::warn(
+                        "rollback",
+                        &format!(
+                            "[robust] block {layer} iteration {k}: {reason}; rolling back to \
+                             the iteration-start snapshot, retrying with lr scale {scale}"
+                        ),
+                        &[
+                            ("layer", layer.into()),
+                            ("iter", k.into()),
+                            ("reason", reason.as_str().into()),
+                            ("lr_scale", scale.into()),
+                        ],
                     );
                     g.restore(&snap);
                 }

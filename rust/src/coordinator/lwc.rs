@@ -21,6 +21,7 @@ use crate::coordinator::driver::{
 use crate::coordinator::par::BlockClips;
 use crate::coordinator::pipeline::CalibSet;
 use crate::model::{BlockView, Params, LINEAR_NAMES};
+use crate::obs;
 use crate::quant::{self, minmax_scale, ClipFactors, QuantConfig};
 use crate::robust::{with_retry, BlockCheckpoint, LossHealth, RobustConfig, Sentinel};
 use crate::runtime::{Arg, Artifact, Engine};
@@ -144,9 +145,13 @@ impl<'a> LwcOptimizer<'a> {
             match with_retry(&robust.retry, &format!("compiling {name}"), || e.artifact(&name)) {
                 Ok(a) => Some(a),
                 Err(err) => {
-                    eprintln!(
-                        "[robust] LWC step artifact unavailable; \
-                         degrading to RTN with initial clips per block: {err:#}"
+                    obs::warn(
+                        "degraded",
+                        &format!(
+                            "[robust] LWC step artifact unavailable; \
+                             degrading to RTN with initial clips per block: {err:#}"
+                        ),
+                        &[("artifact", name.as_str().into())],
                     );
                     None
                 }
@@ -238,7 +243,11 @@ impl BlockOptimizer for LwcOptimizer<'_> {
         };
 
         if let Some(reason) = &fallback_reason {
-            eprintln!("[robust] block {l}: RTN-with-initial-clips fallback ({reason})");
+            obs::warn(
+                "fallback",
+                &format!("[robust] block {l}: RTN-with-initial-clips fallback ({reason})"),
+                &[("layer", l.into()), ("reason", reason.as_str().into())],
+            );
             trace.losses.clear();
             trace.initial_loss = 0.0;
             trace.status = BlockStatus::RtnFallback;
@@ -384,6 +393,17 @@ impl GuardedIter for LwcLoop<'_, '_> {
                     self.trace.initial_loss = loss;
                 }
                 self.trace.losses.push(loss);
+                if obs::enabled() {
+                    obs::event(
+                        "lwc_iter",
+                        &[
+                            ("layer", self.layer.into()),
+                            ("iter", k.into()),
+                            ("loss", loss.into()),
+                            ("lr_scale", sentinel.lr_scale.into()),
+                        ],
+                    );
+                }
             }
             LossHealth::NonFinite => {
                 return Ok(Some(IterFailure::Numeric(format!("non-finite loss {loss}"))));

@@ -26,6 +26,7 @@ use crate::coordinator::driver::{
 use crate::coordinator::pipeline::CalibSet;
 use crate::coordinator::schedule::Schedule;
 use crate::model::{BlockView, Params, LINEAR_NAMES};
+use crate::obs;
 use crate::quant::{
     self, dst_effective_scale, hard_codes, minmax_scale, nu_init, w_floor, ClipFactors,
     QParams, QuantConfig, SAT_NU,
@@ -177,9 +178,13 @@ impl<'a> ParOptimizer<'a> {
             match with_retry(&robust.retry, &format!("compiling {name}"), || e.artifact(&name)) {
                 Ok(a) => Some(a),
                 Err(err) => {
-                    eprintln!(
-                        "[robust] PAR step artifact unavailable; \
-                         degrading to hardened RTN per block: {err:#}"
+                    obs::warn(
+                        "degraded",
+                        &format!(
+                            "[robust] PAR step artifact unavailable; \
+                             degrading to hardened RTN per block: {err:#}"
+                        ),
+                        &[("artifact", name.as_str().into())],
                     );
                     None
                 }
@@ -276,7 +281,11 @@ impl BlockOptimizer for ParOptimizer<'_> {
 
         let mut quantized = BTreeMap::new();
         if let Some(reason) = fallback_reason {
-            eprintln!("[robust] block {l}: hardened-RTN fallback ({reason})");
+            obs::warn(
+                "fallback",
+                &format!("[robust] block {l}: hardened-RTN fallback ({reason})"),
+                &[("layer", l.into()), ("reason", reason.as_str().into())],
+            );
             trace.losses.clear();
             trace.initial_loss = 0.0;
             trace.status = BlockStatus::RtnFallback;
@@ -486,6 +495,25 @@ impl GuardedIter for ParLoop<'_> {
                     ))));
                 }
             }
+        }
+        if obs::enabled() {
+            // soften-progress series: loss + hardened fraction per PAR iter
+            let total: usize = self.states.values().map(|s| s.nu.data.len()).sum();
+            let hard: usize = self
+                .states
+                .values()
+                .map(|s| s.nu.data.iter().filter(|x| x.abs() >= SAT_NU).count())
+                .sum();
+            obs::event(
+                "par_iter",
+                &[
+                    ("layer", self.layer.into()),
+                    ("iter", k.into()),
+                    ("loss", self.trace.losses.last().copied().unwrap_or(f32::NAN).into()),
+                    ("hard_frac", (hard as f64 / total.max(1) as f64).into()),
+                    ("lr_scale", sentinel.lr_scale.into()),
+                ],
+            );
         }
         Ok(None)
     }

@@ -7,6 +7,7 @@ use anyhow::{ensure, Result};
 
 use crate::model::hostfwd::{block_fwd, BlockFwdOpts};
 use crate::model::{BlockView, ModelConfig, Params, LINEAR_NAMES};
+use crate::obs;
 use crate::robust::{with_retry, RetryPolicy};
 use crate::runtime::{Arg, Artifact, Engine};
 use crate::tensor::Tensor;
@@ -158,9 +159,13 @@ impl<'e> ForwardBackend<'e> {
             }) {
                 Ok(r) => Some(r),
                 Err(err) => {
-                    eprintln!(
-                        "[robust] block forward artifact unavailable; \
-                         using host-side reference forward: {err:#}"
+                    obs::warn(
+                        "degraded",
+                        &format!(
+                            "[robust] block forward artifact unavailable; \
+                             using host-side reference forward: {err:#}"
+                        ),
+                        &[("artifact", format!("block_fp_fwd.{size}").into())],
                     );
                     None
                 }
@@ -177,13 +182,29 @@ impl<'e> ForwardBackend<'e> {
     pub fn forward_all(&self, bw: &BlockView, set: &CalibSet, qmax_act: f32) -> Result<Tensor> {
         if let Some(r) = &self.runner {
             let what = format!("device forward ({})", r.art.name());
+            let t0 = std::time::Instant::now();
             match with_retry(&self.retry, &what, || r.forward_all(bw, set, qmax_act)) {
-                Ok(y) => return Ok(y),
+                Ok(y) => {
+                    obs::hist_record("forward.device_us", t0.elapsed().as_secs_f64() * 1e6);
+                    obs::counter_add("forward.device", 1);
+                    return Ok(y);
+                }
                 Err(e) => {
-                    eprintln!("[robust] {what} failed persistently; host-side reference forward: {e:#}")
+                    obs::counter_add("forward.device_failed", 1);
+                    obs::warn(
+                        "degraded",
+                        &format!(
+                            "[robust] {what} failed persistently; host-side reference forward: {e:#}"
+                        ),
+                        &[("what", what.as_str().into())],
+                    );
                 }
             }
         }
-        Ok(host_forward_all(bw, set, &self.cfg, qmax_act))
+        let t0 = std::time::Instant::now();
+        let y = host_forward_all(bw, set, &self.cfg, qmax_act);
+        obs::hist_record("forward.host_us", t0.elapsed().as_secs_f64() * 1e6);
+        obs::counter_add("forward.host", 1);
+        Ok(y)
     }
 }

@@ -73,6 +73,16 @@ fn avg_acc(accs: &[(String, f64)]) -> f64 {
     accs.iter().find(|(n, _)| n == "Avg").map(|(_, a)| *a).unwrap_or(f64::NAN)
 }
 
+/// Persist a calibration report as a JSON artifact next to the markdown
+/// tables (machine-readable per-block traces incl. fallback blocks).
+fn emit_calib_json(tag: &str, report: Option<&crate::coordinator::par::CalibReport>) {
+    if let Some(r) = report {
+        if let Err(e) = crate::report::write_json(tag, &r.to_json()) {
+            eprintln!("[report] could not write {tag}.json: {e:#}");
+        }
+    }
+}
+
 fn run_method(
     ctx: &Ctx,
     base: &Params,
@@ -80,10 +90,19 @@ fn run_method(
     qcfg: &QuantConfig,
     calib: &Corpus,
 ) -> Result<Quantized> {
-    eprintln!("[{}] {} ...", qcfg.label(), method.label());
+    crate::obs::warn(
+        "warn",
+        &format!("[{}] {} ...", qcfg.label(), method.label()),
+        &[("method", method.label().into()), ("config", qcfg.label().into())],
+    );
     let mut opts = MethodOpts::new(*qcfg, ctx.n_calib(), ctx.fast);
     opts.robust = ctx.robust.clone();
-    quantize(&ctx.eng, base, method, qcfg, calib, &opts)
+    let q = quantize(&ctx.eng, base, method, qcfg, calib, &opts)?;
+    emit_calib_json(
+        &format!("calib_{}_{}", method.label(), qcfg.label()),
+        q.report.as_ref(),
+    );
+    Ok(q)
 }
 
 // -- Table 1 (WikiText2 PPL) + Table 9 (C4 PPL), weight-only ----------------
@@ -306,8 +325,16 @@ fn table5(ctx: &Ctx) -> Result<()> {
             let mut opts = MethodOpts::new(qcfg, n_seq, ctx.fast);
             opts.robust = ctx.robust.clone();
             opts.tesseraq.artifact_suffix = suffix.to_string();
-            eprintln!("[table5] {} n={} bs={}", kind.name(), n_seq, bs);
+            crate::obs::warn(
+                "warn",
+                &format!("[table5] {} n={} bs={}", kind.name(), n_seq, bs),
+                &[("calib", kind.name().into()), ("n_seq", n_seq.into()), ("bs", bs.into())],
+            );
             let q = quantize(&ctx.eng, &base, Method::TesseraQ, &qcfg, &calib, &opts)?;
+            emit_calib_json(
+                &format!("calib_table5_{}_n{}_b{}", kind.name(), n_seq, bs),
+                q.report.as_ref(),
+            );
             let e = evaluate(ctx, size, &q, &qcfg, true)?;
             let wall = q.report.as_ref().map(|r| r.wall_s).unwrap_or(f64::NAN);
             t.row(vec![n_seq.to_string(), bs.to_string(), kind.name().into(),
@@ -339,7 +366,12 @@ fn table6(ctx: &Ctx) -> Result<()> {
             opts.robust = ctx.robust.clone();
             opts.tesseraq.enable_par = par;
             opts.tesseraq.enable_dst = dst;
-            quantize(&ctx.eng, &base, Method::TesseraQ, &qcfg, &calib, &opts)?
+            let q = quantize(&ctx.eng, &base, Method::TesseraQ, &qcfg, &calib, &opts)?;
+            emit_calib_json(
+                &format!("calib_table6_par{}_dst{}", par as u8, dst as u8),
+                q.report.as_ref(),
+            );
+            q
         };
         let e = evaluate(ctx, size, &q, &qcfg, true)?;
         let onoff = |b: bool| if b { "yes" } else { "no" }.to_string();
@@ -537,6 +569,7 @@ fn figure3(ctx: &Ctx) -> Result<()> {
         opts.robust = ctx.robust.clone();
         opts.schedule = sched;
         let q = quantize(&ctx.eng, &base, Method::TesseraQ, &qcfg, &calib, &opts)?;
+        emit_calib_json(&format!("calib_figure3_{}", sched.label()), q.report.as_ref());
         let e = evaluate(ctx, size, &q, &qcfg, true)?;
         t.row(vec![sched.label(), fmt_ppl(0.5 * (e.ppl_wiki + e.ppl_c4)),
                    fmt_acc(avg_acc(&e.accs))]);
@@ -574,6 +607,8 @@ fn figure4(ctx: &Ctx) -> Result<()> {
     let rep_lwc = crate::coordinator::lwc::calibrate_lwc_robust(
         Some(&ctx.eng), &mut p_lwc, &tokens, ctx.n_calib(), &opts.lwc, &ctx.robust,
     )?;
+    emit_calib_json("calib_figure4_tesseraq", Some(&rep_tq));
+    emit_calib_json("calib_figure4_omniquant", Some(&rep_lwc.calib));
 
     let mut t = Table::new(
         "Figure 4 (data): final block reconstruction loss per block",

@@ -22,6 +22,7 @@ pub mod data;
 pub mod eval;
 pub mod experiments;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod report;
 pub mod robust;

@@ -9,6 +9,11 @@
 //!   repro figure N  [--fast]       regenerate paper figure N
 //!   repro e2e       [--fast]       full train->quantize->eval->serve run
 //!   repro all-tables [--fast]      every table + figure
+//!   repro calibrate-smoke [...]    artifact-free host-path calibration (CI)
+//!   repro trace-summary <run>      render a telemetry trace
+//!
+//! All subcommands accept `--trace-out DIR` (or `TESSERAQ_TRACE=DIR`) to
+//! emit structured JSONL telemetry; see `src/obs/`.
 
 use std::collections::HashMap;
 
@@ -17,7 +22,7 @@ use anyhow::{bail, Context, Result};
 use tesseraq::coordinator::pretrain::{pretrain, PretrainConfig};
 use tesseraq::data::CorpusKind;
 use tesseraq::eval::Evaluator;
-use tesseraq::experiments::methods::{quantize, Method, MethodOpts};
+use tesseraq::experiments::methods::{gptq_model, quantize, Method, MethodOpts};
 use tesseraq::experiments::{tables, Ctx};
 use tesseraq::model::{ModelConfig, Params};
 use tesseraq::quant::{GroupScheme, QuantConfig};
@@ -113,27 +118,48 @@ fn robust_opts(args: &Args) -> Result<RobustConfig> {
 
 fn main() -> Result<()> {
     let args = parse_args();
+    // Arm the telemetry sink before any work: --trace-out wins, else the
+    // TESSERAQ_TRACE env var. Shutdown (final metric flush) runs on both
+    // the success and the error path.
+    if let Some(dir) = args.flag("trace-out") {
+        tesseraq::obs::init(dir)?;
+    } else {
+        tesseraq::obs::init_from_env()?;
+    }
+    let res = dispatch(&args);
+    tesseraq::obs::shutdown();
+    res
+}
+
+fn dispatch(args: &Args) -> Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
-        "pretrain" => cmd_pretrain(&args),
-        "calibrate" => cmd_calibrate(&args),
-        "eval" => cmd_eval(&args),
-        "serve" => cmd_serve(&args),
+        "pretrain" => cmd_pretrain(args),
+        "calibrate" => cmd_calibrate(args),
+        "calibrate-smoke" => cmd_calibrate_smoke(args),
+        "trace-summary" => {
+            let path = args.positional.get(1).context("trace-summary <run-dir|trace.jsonl>")?;
+            let s = tesseraq::obs::summary::render_summary(std::path::Path::new(path))?;
+            println!("{s}");
+            Ok(())
+        }
+        "eval" => cmd_eval(args),
+        "serve" => cmd_serve(args),
         "table" => {
             let id: u32 = args.positional.get(1).context("table N")?.parse()?;
             let mut ctx = Ctx::new(args.fast())?;
-            ctx.robust = robust_opts(&args)?;
+            ctx.robust = robust_opts(args)?;
             tables::run_table(&ctx, id)
         }
         "figure" => {
             let id: u32 = args.positional.get(1).context("figure N")?.parse()?;
             let mut ctx = Ctx::new(args.fast())?;
-            ctx.robust = robust_opts(&args)?;
+            ctx.robust = robust_opts(args)?;
             tables::run_figure(&ctx, id)
         }
         "all-tables" => {
             let mut ctx = Ctx::new(args.fast())?;
-            ctx.robust = robust_opts(&args)?;
+            ctx.robust = robust_opts(args)?;
             for id in [1, 2, 3, 4, 5, 6, 7, 8, 10, 11] {
                 println!("==== table {id} ====");
                 tables::run_table(&ctx, id)?;
@@ -144,7 +170,7 @@ fn main() -> Result<()> {
             }
             Ok(())
         }
-        "e2e" => cmd_e2e(&args),
+        "e2e" => cmd_e2e(args),
         _ => {
             println!("{}", HELP);
             Ok(())
@@ -156,6 +182,11 @@ const HELP: &str = "repro — TesseraQ reproduction launcher
   pretrain  --size S --steps N [--corpus wiki|c4] [--out PATH]
   calibrate --size S --quant W2A16g128 [--method tesseraq] [--ckpt PATH]
             [--checkpoint-dir DIR] [--resume] [--inject-faults SPEC]
+  calibrate-smoke [--size nano] [--quant W2A16g32] [--n-seq 2] [--seq-len 16]
+            host-path GPTQ calibration on a fresh random-init model;
+            needs no compiled artifacts — for CI and telemetry smoke runs
+  trace-summary <run-dir|trace.jsonl>
+            render self-time profile + per-block loss table from a trace
   eval      --size S [--ckpt PATH] [--corpus wiki|c4]
   serve     --size S --bits 2|3|4 [--batch B] [--new N]
   table N   [--fast]        regenerate paper table N (1-12)
@@ -163,7 +194,12 @@ const HELP: &str = "repro — TesseraQ reproduction launcher
   all-tables [--fast]
   e2e       [--fast]        full train -> quantize -> eval -> serve
 
-resilience (calibrate, table, figure, all-tables):
+telemetry (all subcommands):
+  --trace-out DIR        write structured JSONL telemetry to DIR/trace.jsonl
+                         (appends across runs; DIR/manifest.json indexes runs)
+                         env equivalent: TESSERAQ_TRACE=DIR
+
+resilience (calibrate, calibrate-smoke, table, figure, all-tables):
   --checkpoint-dir DIR   persist per-block calibration checkpoints to DIR
                          (each method/config gets its own subdirectory)
   --resume               resume a partial run from --checkpoint-dir
@@ -236,6 +272,44 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
         });
     q.params.save(&out)?;
     println!("saved {}", out.display());
+    Ok(())
+}
+
+/// Artifact-free calibration smoke: host-path GPTQ on a fresh random-init
+/// model through the unified reconstruction driver. Needs no compiled
+/// artifact directory, so CI can exercise the robust + telemetry layers
+/// (checkpoints, fault injection, resume, traces) with this command alone.
+fn cmd_calibrate_smoke(args: &Args) -> Result<()> {
+    let size = args.flag("size").unwrap_or("nano").to_string();
+    let cfg = ModelConfig::preset(&size)?;
+    let qcfg = QuantConfig::parse(args.flag("quant").unwrap_or("W2A16g32"))?;
+    let n_seq: usize = args.flag("n-seq").unwrap_or("2").parse()?;
+    let seq_len: usize = args.flag("seq-len").unwrap_or("16").parse()?;
+    if n_seq == 0 || seq_len == 0 || seq_len > cfg.max_seq {
+        bail!("need n_seq >= 1 and 1 <= seq_len <= {}", cfg.max_seq);
+    }
+    let robust = robust_opts(args)?;
+    let mut rng = Pcg32::seeded(0x5EED);
+    let mut params = Params::init(&cfg, &mut rng);
+    let tokens: Vec<i32> = (0..n_seq * seq_len)
+        .map(|i| ((i * 17 + 3) % cfg.vocab_size) as i32)
+        .collect();
+    println!(
+        "calibrate-smoke: {size} gptq at {} ({n_seq}x{seq_len} tokens)",
+        qcfg.label()
+    );
+    let report = gptq_model(None, &mut params, &tokens, n_seq, &qcfg, &robust)?;
+    let fb = report.fallback_blocks();
+    println!(
+        "done: {} blocks in {:.2}s{}",
+        report.per_block.len(),
+        report.wall_s,
+        if fb.is_empty() { String::new() } else { format!(" (RTN fallback: {fb:?})") }
+    );
+    match tesseraq::report::write_json("calib_smoke", &report.to_json()) {
+        Ok(p) => println!("report: {}", p.display()),
+        Err(e) => eprintln!("[report] could not write calib_smoke.json: {e:#}"),
+    }
     Ok(())
 }
 

@@ -1,0 +1,218 @@
+//! Metrics registry: counters, gauges, and log2-bucket histograms.
+//!
+//! Global, mutex-guarded (the engine runs scoped worker threads), and
+//! inert when the sink is disabled — each free function early-returns on
+//! one relaxed atomic load. [`flush_metrics`] serializes every metric as
+//! one `metric` event; the driver flushes at the end of each run and the
+//! sink flushes again on shutdown.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::obs::sink::{enabled, event};
+
+/// Log2 bucket count: bucket 0 catches v < 1 (and non-finite values),
+/// bucket i >= 1 covers [2^(i-1), 2^i), the last bucket is open-ended.
+/// 2^38 ns ≈ 4.6 min — comfortably above any single measurement here.
+pub const N_BUCKETS: usize = 40;
+
+/// Fixed log-scale histogram. Bucket boundaries are exact powers of two
+/// computed from the f64 exponent bits, so values like 2.0 land in the
+/// [2, 4) bucket without float-log rounding surprises.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub count: u64,
+    pub sum: f64,
+    pub buckets: [u64; N_BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { count: 0, sum: 0.0, buckets: [0; N_BUCKETS] }
+    }
+}
+
+impl Histogram {
+    /// Bucket index for `v`: 0 for v < 1 (or NaN), else exponent + 1
+    /// clamped to the last bucket.
+    pub fn bucket_index(v: f64) -> usize {
+        if v.is_nan() || v < 1.0 {
+            return 0;
+        }
+        let e = ((v.to_bits() >> 52) & 0x7ff) as isize - 1023;
+        ((e + 1).max(1) as usize).min(N_BUCKETS - 1)
+    }
+
+    /// Upper bound of bucket `i` (inclusive lower bound is
+    /// `bucket_bound(i - 1)`); bucket 0's bound is 1.
+    pub fn bucket_bound(i: usize) -> f64 {
+        (2.0f64).powi(i as i32)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.count += 1;
+        if v.is_finite() {
+            self.sum += v;
+        }
+        self.buckets[Self::bucket_index(v)] += 1;
+    }
+
+    /// Quantile estimate: the upper bound of the bucket holding the q-th
+    /// sample. Coarse (factor-of-two) but monotone and allocation-free.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= target {
+                return Self::bucket_bound(i);
+            }
+        }
+        Self::bucket_bound(N_BUCKETS - 1)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+#[derive(Default)]
+struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+static REGISTRY: Mutex<Option<Registry>> = Mutex::new(None);
+
+fn with_registry(f: impl FnOnce(&mut Registry)) {
+    let mut g = REGISTRY.lock().unwrap_or_else(|p| p.into_inner());
+    f(g.get_or_insert_with(Registry::default));
+}
+
+/// Add to a monotonic counter. No-op when the sink is disabled.
+pub fn counter_add(name: &str, delta: u64) {
+    if !enabled() {
+        return;
+    }
+    with_registry(|r| *r.counters.entry(name.to_string()).or_insert(0) += delta);
+}
+
+/// Set a gauge to its latest value. No-op when the sink is disabled.
+pub fn gauge_set(name: &str, v: f64) {
+    if !enabled() {
+        return;
+    }
+    with_registry(|r| {
+        r.gauges.insert(name.to_string(), v);
+    });
+}
+
+/// Record one histogram sample. No-op when the sink is disabled.
+pub fn hist_record(name: &str, v: f64) {
+    if !enabled() {
+        return;
+    }
+    with_registry(|r| r.hists.entry(name.to_string()).or_default().record(v));
+}
+
+/// Emit every metric as a `metric` event and reset the registry (each
+/// flush covers the interval since the previous one).
+pub fn flush_metrics() {
+    if !enabled() {
+        return;
+    }
+    let taken = {
+        let mut g = REGISTRY.lock().unwrap_or_else(|p| p.into_inner());
+        g.take()
+    };
+    let Some(r) = taken else { return };
+    for (name, v) in &r.counters {
+        event(
+            "metric",
+            &[("metric", name.as_str().into()), ("type", "counter".into()), ("value", (*v).into())],
+        );
+    }
+    for (name, v) in &r.gauges {
+        event(
+            "metric",
+            &[("metric", name.as_str().into()), ("type", "gauge".into()), ("value", (*v).into())],
+        );
+    }
+    for (name, h) in &r.hists {
+        // compact non-empty-bucket dump: "i:count" pairs
+        let mut buckets = String::new();
+        for (i, &b) in h.buckets.iter().enumerate() {
+            if b > 0 {
+                if !buckets.is_empty() {
+                    buckets.push(' ');
+                }
+                buckets.push_str(&format!("{i}:{b}"));
+            }
+        }
+        event(
+            "metric",
+            &[
+                ("metric", name.as_str().into()),
+                ("type", "histogram".into()),
+                ("count", h.count.into()),
+                ("sum", h.sum.into()),
+                ("mean", h.mean().into()),
+                ("p50", h.quantile(0.5).into()),
+                ("p95", h.quantile(0.95).into()),
+                ("buckets", buckets.into()),
+            ],
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_exact_powers_of_two() {
+        assert_eq!(Histogram::bucket_index(0.0), 0);
+        assert_eq!(Histogram::bucket_index(0.999), 0);
+        assert_eq!(Histogram::bucket_index(f64::NAN), 0);
+        assert_eq!(Histogram::bucket_index(-5.0), 0);
+        assert_eq!(Histogram::bucket_index(1.0), 1);
+        assert_eq!(Histogram::bucket_index(1.9999), 1);
+        assert_eq!(Histogram::bucket_index(2.0), 2);
+        assert_eq!(Histogram::bucket_index(3.9999), 2);
+        assert_eq!(Histogram::bucket_index(4.0), 3);
+        assert_eq!(Histogram::bucket_index(1024.0), 11);
+        assert_eq!(Histogram::bucket_index(1e300), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_are_monotone_bucket_bounds() {
+        let mut h = Histogram::default();
+        for v in [1.0, 1.5, 3.0, 3.5, 100.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count, 5);
+        assert!((h.sum - 109.0).abs() < 1e-9);
+        // p50 falls in the [2,4) bucket -> bound 4
+        assert_eq!(h.quantile(0.5), 4.0);
+        // p95+ reaches the [64,128) bucket -> bound 128
+        assert_eq!(h.quantile(0.99), 128.0);
+        assert!(h.quantile(0.5) <= h.quantile(0.95));
+    }
+
+    #[test]
+    fn disabled_registry_records_nothing() {
+        assert!(!enabled());
+        counter_add("x", 3);
+        hist_record("h", 1.0);
+        let g = REGISTRY.lock().unwrap_or_else(|p| p.into_inner());
+        assert!(g.is_none());
+    }
+}

@@ -1,0 +1,47 @@
+//! Structured telemetry: spans, metrics, and a JSONL event sink.
+//!
+//! Zero-dependency (hand-rolled, like the rest of the offline vendor
+//! set) and zero-cost when disabled: every public entry point is gated
+//! on one relaxed atomic load, so an untraced calibration pays a single
+//! branch per call site. Enabled via `--trace-out DIR` / `TESSERAQ_TRACE`:
+//!
+//! * [`sink`] — the JSONL event sink. One event per line appended (never
+//!   clobbered — a resumed run extends the interrupted run's trace) to
+//!   `<dir>/trace.jsonl`, plus a `manifest.json` tying every run to its
+//!   checkpoint config fingerprint.
+//! * [`span`] — hierarchical RAII spans (`span!("block", idx)`) recording
+//!   wall time, self time (wall minus child spans), and parent/child
+//!   structure.
+//! * [`metrics`] — a global registry of counters, gauges, and histograms
+//!   with fixed log2 buckets; flushed as `metric` events.
+//! * [`summary`] — `repro trace-summary <run>`: renders a per-phase
+//!   self-time profile and a per-block loss table from a trace file.
+//!
+//! Event kinds emitted across the codebase: `telemetry_init`, `run_start`,
+//! `run_end`, `span_open`, `span_close`, `block_done`, `par_iter`,
+//! `lwc_iter`, `rollback`, `retry`, `retry_recovered`, `fallback`,
+//! `degraded`, `resume`, `resume_stop`, `checkpoint_write`,
+//! `checkpoint_load`, `fault_injected`, `serve_request`, `bench`,
+//! `metric`, `warn`.
+
+pub mod metrics;
+pub mod sink;
+pub mod span;
+pub mod summary;
+
+pub use metrics::{counter_add, flush_metrics, gauge_set, hist_record, Histogram};
+pub use sink::{enabled, event, init, init_from_env, run_start, shutdown, trace_dir, warn, Val};
+pub use span::{enter, SpanGuard};
+
+/// RAII span macro: `span!("phase")` or `span!("block", idx)` (the second
+/// argument becomes the span's `detail` via `Display`). Bind the result —
+/// `let _sp = span!(...)` — so the guard lives to the end of the scope.
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        $crate::obs::enter($name, None)
+    };
+    ($name:expr, $detail:expr) => {
+        $crate::obs::enter($name, Some(format!("{}", $detail)))
+    };
+}

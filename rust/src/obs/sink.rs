@@ -1,0 +1,304 @@
+//! The JSONL event sink: one event per line, atomically appended.
+//!
+//! Events are written with a single `write_all` on a file opened in
+//! append mode, so concurrent writers (the engine's worker threads, the
+//! calibration loop) interleave whole lines, never partial ones. The
+//! sink is global — a process traces to at most one directory — and
+//! guarded by a mutex; the fast path for a disabled sink is one relaxed
+//! atomic load and no allocation.
+//!
+//! Alongside `trace.jsonl` the sink maintains `manifest.json`, a
+//! `{"runs": [...]}` document appended to (atomically, via tmp+rename)
+//! on every [`run_start`], tying trace events to the checkpoint config
+//! fingerprint so a kill@block + `--resume` pair is recognizably one
+//! logical run split across two processes.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{escape, Json};
+
+/// One event field value. `From` impls keep call sites terse:
+/// `("layer", l.into())`.
+#[derive(Debug, Clone)]
+pub enum Val {
+    Str(String),
+    F(f64),
+    I(i64),
+    U(u64),
+    B(bool),
+}
+
+impl From<&str> for Val {
+    fn from(s: &str) -> Val {
+        Val::Str(s.to_string())
+    }
+}
+impl From<String> for Val {
+    fn from(s: String) -> Val {
+        Val::Str(s)
+    }
+}
+impl From<f64> for Val {
+    fn from(v: f64) -> Val {
+        Val::F(v)
+    }
+}
+impl From<f32> for Val {
+    fn from(v: f32) -> Val {
+        Val::F(v as f64)
+    }
+}
+impl From<usize> for Val {
+    fn from(v: usize) -> Val {
+        Val::U(v as u64)
+    }
+}
+impl From<u64> for Val {
+    fn from(v: u64) -> Val {
+        Val::U(v)
+    }
+}
+impl From<u32> for Val {
+    fn from(v: u32) -> Val {
+        Val::U(v as u64)
+    }
+}
+impl From<i64> for Val {
+    fn from(v: i64) -> Val {
+        Val::I(v)
+    }
+}
+impl From<bool> for Val {
+    fn from(v: bool) -> Val {
+        Val::B(v)
+    }
+}
+
+impl Val {
+    fn write_json(&self, out: &mut String) {
+        match self {
+            Val::Str(s) => {
+                out.push('"');
+                out.push_str(&escape(s));
+                out.push('"');
+            }
+            Val::F(v) => out.push_str(&fmt_f64(*v)),
+            Val::I(v) => out.push_str(&v.to_string()),
+            Val::U(v) => out.push_str(&v.to_string()),
+            Val::B(v) => out.push_str(if *v { "true" } else { "false" }),
+        }
+    }
+}
+
+/// JSON has no NaN/Inf; serialize non-finite floats as null so every
+/// emitted line stays parseable.
+pub fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+struct SinkState {
+    file: File,
+    dir: PathBuf,
+    seq: u64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Option<SinkState>> = Mutex::new(None);
+
+/// Is the sink armed? The one-branch gate every instrumentation site
+/// (and any caller assembling expensive fields) should check first.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Arm the sink: create `dir`, open `dir/trace.jsonl` in append mode
+/// (a resumed run extends the prior trace), and emit `telemetry_init`.
+pub fn init(dir: impl Into<PathBuf>) -> Result<()> {
+    let dir = dir.into();
+    std::fs::create_dir_all(&dir)
+        .with_context(|| format!("creating trace dir {}", dir.display()))?;
+    let path = dir.join("trace.jsonl");
+    let file = OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    {
+        let mut g = SINK.lock().unwrap_or_else(|p| p.into_inner());
+        *g = Some(SinkState { file, dir, seq: 0 });
+    }
+    ENABLED.store(true, Ordering::SeqCst);
+    event("telemetry_init", &[("pid", (std::process::id() as u64).into())]);
+    Ok(())
+}
+
+/// Arm the sink from `TESSERAQ_TRACE`, if set. Used by binaries that
+/// have no `--trace-out` flag of their own (benches, examples).
+pub fn init_from_env() -> Result<bool> {
+    match std::env::var("TESSERAQ_TRACE") {
+        Ok(d) if !d.is_empty() => {
+            init(d)?;
+            Ok(true)
+        }
+        _ => Ok(false),
+    }
+}
+
+/// Flush pending metrics and disarm the sink. Idempotent.
+pub fn shutdown() {
+    if !enabled() {
+        return;
+    }
+    crate::obs::metrics::flush_metrics();
+    ENABLED.store(false, Ordering::SeqCst);
+    let mut g = SINK.lock().unwrap_or_else(|p| p.into_inner());
+    *g = None;
+}
+
+/// The active trace directory, if armed.
+pub fn trace_dir() -> Option<PathBuf> {
+    let g = SINK.lock().unwrap_or_else(|p| p.into_inner());
+    g.as_ref().map(|s| s.dir.clone())
+}
+
+fn now_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Emit one event line. No-op (one atomic load) when the sink is off.
+pub fn event(kind: &str, fields: &[(&str, Val)]) {
+    if !enabled() {
+        return;
+    }
+    let mut body = String::with_capacity(96);
+    for (k, v) in fields {
+        body.push_str(",\"");
+        body.push_str(&escape(k));
+        body.push_str("\":");
+        v.write_json(&mut body);
+    }
+    let mut g = SINK.lock().unwrap_or_else(|p| p.into_inner());
+    if let Some(s) = g.as_mut() {
+        let line = format!(
+            "{{\"seq\":{},\"ts_ms\":{},\"kind\":\"{}\"{}}}\n",
+            s.seq,
+            now_ms(),
+            escape(kind),
+            body
+        );
+        s.seq += 1;
+        // single write_all on an O_APPEND fd: whole-line atomicity
+        let _ = s.file.write_all(line.as_bytes());
+    }
+}
+
+/// Structured event + human-readable stderr line. This is the
+/// replacement for the ad-hoc `eprintln!` progress prints: the pretty
+/// text always reaches stderr (the human subscriber), and when the sink
+/// is armed the same information lands in the trace with `msg` plus the
+/// structured fields.
+pub fn warn(kind: &str, msg: &str, fields: &[(&str, Val)]) {
+    eprintln!("{msg}");
+    if !enabled() {
+        return;
+    }
+    let mut all: Vec<(&str, Val)> = Vec::with_capacity(fields.len() + 1);
+    all.push(("msg", msg.into()));
+    all.extend(fields.iter().cloned());
+    event(kind, &all);
+}
+
+/// Record the start of a logical run: a `run_start` event plus an entry
+/// in `manifest.json` keyed by the checkpoint config fingerprint. Both
+/// halves of a kill + resume pair call this with the same fingerprint.
+pub fn run_start(fingerprint: u64, method: &str, fields: &[(&str, Val)]) {
+    if !enabled() {
+        return;
+    }
+    let fp = format!("{fingerprint:016x}");
+    let mut all: Vec<(&str, Val)> = vec![
+        ("fingerprint", fp.as_str().into()),
+        ("method", method.into()),
+    ];
+    all.extend(fields.iter().cloned());
+    event("run_start", &all);
+    if let Some(dir) = trace_dir() {
+        if let Err(e) = append_manifest(&dir, &fp, method, fields) {
+            eprintln!("[obs] manifest update failed: {e:#}");
+        }
+    }
+}
+
+fn append_manifest(dir: &Path, fp: &str, method: &str, fields: &[(&str, Val)]) -> Result<()> {
+    let path = dir.join("manifest.json");
+    let mut root = match std::fs::read_to_string(&path) {
+        Ok(text) => Json::parse(&text).unwrap_or(Json::Null),
+        Err(_) => Json::Null,
+    };
+    if !matches!(root, Json::Obj(_)) {
+        root = Json::Obj(std::collections::BTreeMap::new());
+    }
+    let mut entry = std::collections::BTreeMap::new();
+    entry.insert("fingerprint".to_string(), Json::Str(fp.to_string()));
+    entry.insert("method".to_string(), Json::Str(method.to_string()));
+    entry.insert("ts_ms".to_string(), Json::Num(now_ms() as f64));
+    for (k, v) in fields {
+        let jv = match v {
+            Val::Str(s) => Json::Str(s.clone()),
+            Val::F(x) => Json::Num(*x),
+            Val::I(x) => Json::Num(*x as f64),
+            Val::U(x) => Json::Num(*x as f64),
+            Val::B(b) => Json::Bool(*b),
+        };
+        entry.insert((*k).to_string(), jv);
+    }
+    if let Json::Obj(m) = &mut root {
+        let runs = m.entry("runs".to_string()).or_insert_with(|| Json::Arr(Vec::new()));
+        if let Json::Arr(a) = runs {
+            a.push(Json::Obj(entry));
+        }
+    }
+    // atomic rewrite, same pattern as the checkpoint store
+    let tmp = dir.join(".manifest.json.tmp");
+    std::fs::write(&tmp, root.dump())
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_f64_is_json_safe() {
+        assert_eq!(fmt_f64(1.5), "1.5");
+        assert_eq!(fmt_f64(f64::NAN), "null");
+        assert_eq!(fmt_f64(f64::INFINITY), "null");
+        assert_eq!(fmt_f64(-0.25), "-0.25");
+    }
+
+    #[test]
+    fn disabled_sink_is_inert() {
+        // no init in this test binary: event/warn must be no-ops
+        assert!(!enabled());
+        event("noop", &[("k", 1usize.into())]);
+        assert!(trace_dir().is_none());
+    }
+}

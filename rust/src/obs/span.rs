@@ -1,0 +1,107 @@
+//! Hierarchical RAII spans.
+//!
+//! `enter("block", Some("3"))` (or the [`crate::span!`] macro) pushes a
+//! frame on a thread-local stack and emits `span_open`; dropping the
+//! guard emits `span_close` with the span's wall time and *self* time —
+//! wall minus the wall time of its direct children — which is what the
+//! `trace-summary` profile aggregates. Parent/child structure is
+//! per-thread (ids are globally unique), matching the engine's scoped
+//! worker threads.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::obs::sink::{enabled, event, Val};
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+struct Frame {
+    id: u64,
+    /// Accumulated wall time of completed direct children, ns.
+    child_ns: u128,
+}
+
+thread_local! {
+    static STACK: RefCell<Vec<Frame>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Open a span. Returns an inert guard (no allocation, no push) when the
+/// sink is disabled.
+pub fn enter(name: &'static str, detail: Option<String>) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { id: 0, name, detail: None, start: None };
+    }
+    let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    let parent = STACK.with(|s| {
+        let mut s = s.borrow_mut();
+        let parent = s.last().map(|f| f.id);
+        s.push(Frame { id, child_ns: 0 });
+        parent
+    });
+    let mut fields: Vec<(&str, Val)> = vec![("id", id.into()), ("name", name.into())];
+    if let Some(p) = parent {
+        fields.push(("parent", p.into()));
+    }
+    if let Some(d) = &detail {
+        fields.push(("detail", d.as_str().into()));
+    }
+    event("span_open", &fields);
+    SpanGuard { id, name, detail, start: Some(Instant::now()) }
+}
+
+/// RAII guard returned by [`enter`]; closes the span on drop.
+pub struct SpanGuard {
+    id: u64,
+    name: &'static str,
+    detail: Option<String>,
+    /// `None` = inert guard (sink was disabled at enter time).
+    start: Option<Instant>,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let wall_ns = start.elapsed().as_nanos();
+        let child_ns = STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            // pop back to our frame: tolerate guards dropped out of order
+            let mut child_ns = 0u128;
+            while let Some(f) = s.pop() {
+                if f.id == self.id {
+                    child_ns = f.child_ns;
+                    break;
+                }
+            }
+            if let Some(parent) = s.last_mut() {
+                parent.child_ns += wall_ns;
+            }
+            child_ns
+        });
+        let self_ns = wall_ns.saturating_sub(child_ns);
+        let mut fields: Vec<(&str, Val)> = vec![
+            ("id", self.id.into()),
+            ("name", self.name.into()),
+            ("wall_ms", (wall_ns as f64 / 1e6).into()),
+            ("self_ms", (self_ns as f64 / 1e6).into()),
+        ];
+        if let Some(d) = self.detail.take() {
+            fields.push(("detail", d.into()));
+        }
+        event("span_close", &fields);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inert_guard_when_disabled() {
+        assert!(!enabled());
+        let g = enter("noop", None);
+        assert!(g.start.is_none());
+        drop(g);
+        STACK.with(|s| assert!(s.borrow().is_empty()));
+    }
+}

@@ -1,0 +1,184 @@
+//! `repro trace-summary <run>`: aggregate a JSONL trace into a per-phase
+//! self-time profile and a per-block loss table, rendered through
+//! [`crate::report::Table`] like every other result in the repo.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::report::Table;
+use crate::util::json::Json;
+
+#[derive(Default)]
+struct PhaseAgg {
+    count: u64,
+    wall_ms: f64,
+    self_ms: f64,
+}
+
+#[derive(Default)]
+struct BlockAgg {
+    method: String,
+    status: String,
+    initial_loss: f64,
+    final_loss: f64,
+    steps: u64,
+    wall_ms: f64,
+}
+
+/// Resolve a trace path: a directory means `<dir>/trace.jsonl`.
+pub fn resolve_trace(path: &Path) -> PathBuf {
+    if path.is_dir() {
+        path.join("trace.jsonl")
+    } else {
+        path.to_path_buf()
+    }
+}
+
+/// Render the summary for a trace file (or the directory holding it).
+pub fn render_summary(path: &Path) -> Result<String> {
+    let file = resolve_trace(path);
+    let text = std::fs::read_to_string(&file)
+        .with_context(|| format!("reading trace {}", file.display()))?;
+
+    let mut n_events = 0usize;
+    let mut runs: Vec<(String, String)> = Vec::new();
+    let mut phases: BTreeMap<String, PhaseAgg> = BTreeMap::new();
+    let mut blocks: BTreeMap<u64, BlockAgg> = BTreeMap::new();
+    let mut cur_method = String::new();
+    let mut kinds: BTreeMap<String, u64> = BTreeMap::new();
+
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .with_context(|| format!("{}:{}: malformed event", file.display(), lineno + 1))?;
+        n_events += 1;
+        let kind = j.get("kind")?.as_str()?.to_string();
+        *kinds.entry(kind.clone()).or_insert(0) += 1;
+        match kind.as_str() {
+            "run_start" => {
+                let fp = j.get("fingerprint")?.as_str()?.to_string();
+                cur_method = j.get("method")?.as_str()?.to_string();
+                runs.push((fp, cur_method.clone()));
+            }
+            "span_close" => {
+                let name = j.get("name")?.as_str()?.to_string();
+                let agg = phases.entry(name).or_default();
+                agg.count += 1;
+                agg.wall_ms += j.get("wall_ms")?.as_f64().unwrap_or(0.0);
+                agg.self_ms += j.get("self_ms")?.as_f64().unwrap_or(0.0);
+            }
+            "block_done" => {
+                let layer = j.get("layer")?.as_f64()? as u64;
+                let agg = blocks.entry(layer).or_default();
+                agg.method = cur_method.clone();
+                agg.status =
+                    j.opt("status").and_then(|v| v.as_str().ok()).unwrap_or("?").to_string();
+                agg.initial_loss =
+                    j.opt("initial_loss").and_then(|v| v.as_f64().ok()).unwrap_or(f64::NAN);
+                agg.final_loss =
+                    j.opt("final_loss").and_then(|v| v.as_f64().ok()).unwrap_or(f64::NAN);
+                agg.steps = j.opt("steps").and_then(|v| v.as_f64().ok()).unwrap_or(0.0) as u64;
+                agg.wall_ms = j.opt("wall_ms").and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+            }
+            _ => {}
+        }
+    }
+    if n_events == 0 {
+        bail!("{}: empty trace", file.display());
+    }
+
+    let mut out = String::new();
+    let _ = writeln!(out, "trace: {} ({} events)", file.display(), n_events);
+    for (fp, method) in &runs {
+        let _ = writeln!(out, "run: fingerprint={fp} method={method}");
+    }
+    let _ = writeln!(out);
+
+    // per-phase self-time profile, hottest self-time first
+    let mut profile = Table::new(
+        "Per-phase self-time profile",
+        &["Phase", "Count", "Wall (ms)", "Self (ms)", "Self %"],
+    );
+    let total_self: f64 = phases.values().map(|a| a.self_ms).sum();
+    let mut rows: Vec<(&String, &PhaseAgg)> = phases.iter().collect();
+    rows.sort_by(|a, b| b.1.self_ms.total_cmp(&a.1.self_ms));
+    for (name, a) in rows {
+        profile.row(vec![
+            name.clone(),
+            a.count.to_string(),
+            format!("{:.2}", a.wall_ms),
+            format!("{:.2}", a.self_ms),
+            format!("{:.1}", 100.0 * a.self_ms / total_self.max(1e-12)),
+        ]);
+    }
+    out.push_str(&profile.to_markdown());
+
+    // per-block loss table (covers both halves of a resumed run)
+    if !blocks.is_empty() {
+        let mut bt = Table::new(
+            "Per-block reconstruction loss",
+            &["Block", "Method", "Status", "Initial", "Final", "Steps", "Wall (ms)"],
+        );
+        for (layer, a) in &blocks {
+            bt.row(vec![
+                layer.to_string(),
+                a.method.clone(),
+                a.status.clone(),
+                format!("{:.5}", a.initial_loss),
+                format!("{:.5}", a.final_loss),
+                a.steps.to_string(),
+                format!("{:.1}", a.wall_ms),
+            ]);
+        }
+        out.push_str(&bt.to_markdown());
+    }
+
+    // event-kind census: quick schema sanity check for drills
+    let mut census = Table::new("Event kinds", &["Kind", "Count"]);
+    for (k, n) in &kinds {
+        census.row(vec![k.clone(), n.to_string()]);
+    }
+    out.push_str(&census.to_markdown());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summarizes_a_hand_written_trace() {
+        let dir = std::env::temp_dir().join(format!("tsq_sum_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace = dir.join("trace.jsonl");
+        std::fs::write(
+            &trace,
+            concat!(
+                "{\"seq\":0,\"ts_ms\":1,\"kind\":\"run_start\",\"fingerprint\":\"00ab\",\"method\":\"gptq\"}\n",
+                "{\"seq\":1,\"ts_ms\":2,\"kind\":\"span_close\",\"id\":1,\"name\":\"block\",\"wall_ms\":10.0,\"self_ms\":4.0}\n",
+                "{\"seq\":2,\"ts_ms\":3,\"kind\":\"block_done\",\"layer\":0,\"status\":\"optimized\",\"initial_loss\":1.0,\"final_loss\":0.5,\"steps\":8,\"wall_ms\":10.0}\n",
+            ),
+        )
+        .unwrap();
+        let s = render_summary(&dir).unwrap();
+        assert!(s.contains("fingerprint=00ab"), "{s}");
+        assert!(s.contains("Per-phase self-time profile"), "{s}");
+        assert!(s.contains("Per-block reconstruction loss"), "{s}");
+        assert!(s.contains("block"), "{s}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn malformed_line_is_an_error() {
+        let dir = std::env::temp_dir().join(format!("tsq_sum_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("trace.jsonl"), "{not json}\n").unwrap();
+        assert!(render_summary(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -93,6 +93,26 @@ pub fn fmt_bytes(b: usize) -> String {
     }
 }
 
+/// Persist a JSON artifact under results/<name>.json (next to the
+/// markdown tables). `text` must already be serialized JSON.
+pub fn write_json(name: &str, text: &str) -> Result<PathBuf> {
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let safe: String = name
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '-' || c == '_' || c == '.' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect();
+    let path = dir.join(format!("{safe}.json"));
+    std::fs::write(&path, text)?;
+    Ok(path)
+}
+
 /// Append a section to EXPERIMENTS.md-style logs under results/.
 pub fn append_log(file: &str, text: &str) -> Result<()> {
     let dir = results_dir();

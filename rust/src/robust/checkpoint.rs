@@ -113,6 +113,10 @@ impl CheckpointStore {
         std::fs::rename(&tmp_path, &final_path).with_context(|| {
             format!("renaming {} -> {}", tmp_path.display(), final_path.display())
         })?;
+        crate::obs::event(
+            "checkpoint_write",
+            &[("layer", layer.into()), ("bytes", file.len().into())],
+        );
         Ok(())
     }
 
@@ -173,9 +177,16 @@ impl CheckpointStore {
                 break;
             }
             match self.load_block(l) {
-                Ok(c) => out.push(c),
+                Ok(c) => {
+                    crate::obs::event("checkpoint_load", &[("layer", l.into())]);
+                    out.push(c);
+                }
                 Err(e) => {
-                    eprintln!("[robust] stopping resume scan at block {l}: {e:#}");
+                    crate::obs::warn(
+                        "resume_stop",
+                        &format!("[robust] stopping resume scan at block {l}: {e:#}"),
+                        &[("layer", l.into())],
+                    );
                     break;
                 }
             }

@@ -134,7 +134,7 @@ impl FaultPlan {
     }
 
     fn fire(&self, kind: Kind, block: usize, step: usize, name: &str) -> bool {
-        self.sites.iter().any(|s| {
+        let fired = self.sites.iter().any(|s| {
             s.kind == kind
                 && match kind {
                     Kind::NanLoss => s.block == block && s.step == step,
@@ -142,7 +142,25 @@ impl FaultPlan {
                     Kind::CompileFail | Kind::ExecFail => name.contains(&s.name),
                 }
                 && s.take()
-        })
+        });
+        if fired {
+            let tag = match kind {
+                Kind::NanLoss => "nan",
+                Kind::CompileFail => "compile",
+                Kind::ExecFail => "exec",
+                Kind::Kill => "kill",
+            };
+            crate::obs::event(
+                "fault_injected",
+                &[
+                    ("fault", tag.into()),
+                    ("block", block.into()),
+                    ("step", step.into()),
+                    ("artifact", name.into()),
+                ],
+            );
+        }
+        fired
     }
 
     /// Should the soften loss of (block, 1-based step) be corrupted to NaN?

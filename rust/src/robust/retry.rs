@@ -51,12 +51,20 @@ pub fn with_retry<T>(
         match f() {
             Ok(v) => {
                 if attempt > 1 {
-                    eprintln!("[robust] {what}: recovered on attempt {attempt}/{attempts}");
+                    crate::obs::warn(
+                        "retry_recovered",
+                        &format!("[robust] {what}: recovered on attempt {attempt}/{attempts}"),
+                        &[("what", what.into()), ("attempt", attempt.into())],
+                    );
                 }
                 return Ok(v);
             }
             Err(e) => {
-                eprintln!("[robust] {what} failed (attempt {attempt}/{attempts}): {e:#}");
+                crate::obs::warn(
+                    "retry",
+                    &format!("[robust] {what} failed (attempt {attempt}/{attempts}): {e:#}"),
+                    &[("what", what.into()), ("attempt", attempt.into())],
+                );
                 last_err = Some(e);
                 if attempt < attempts {
                     let d = policy.delay_ms(attempt - 1);

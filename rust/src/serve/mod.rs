@@ -282,10 +282,17 @@ impl ServeModel {
                 prompts.iter().map(|p| p[pos.min(p.len() - 1)]).collect();
             last = self.decode_step(&toks, &mut cache);
         }
+        let _sp = crate::span!("serve.generate", &self.label);
         let t0 = std::time::Instant::now();
         let mut outs: Vec<Vec<i32>> = vec![Vec::with_capacity(max_new); b];
         for _ in 0..max_new {
+            let ts = std::time::Instant::now();
             last = self.decode_step(&last, &mut cache);
+            // per-request latency histogram for the packed qmatmul path
+            crate::obs::hist_record(
+                "serve.decode_step_us",
+                ts.elapsed().as_secs_f64() * 1e6,
+            );
             for (r, &tok) in last.iter().enumerate() {
                 outs[r].push(tok);
             }
@@ -299,6 +306,19 @@ impl ServeModel {
             tokens_per_s: (b * max_new) as f64 / dt,
             weight_bytes: self.weight_bytes(),
         };
+        if crate::obs::enabled() {
+            crate::obs::event(
+                "serve_request",
+                &[
+                    ("label", stats.label.as_str().into()),
+                    ("batch", stats.batch.into()),
+                    ("prompt_len", stats.prompt_len.into()),
+                    ("new_tokens", stats.new_tokens.into()),
+                    ("tokens_per_s", stats.tokens_per_s.into()),
+                    ("weight_bytes", stats.weight_bytes.into()),
+                ],
+            );
+        }
         Ok((outs, stats))
     }
 }

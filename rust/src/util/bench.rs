@@ -29,6 +29,9 @@ pub struct Record {
 
 impl Record {
     pub fn mean_s(&self) -> f64 {
+        if self.iters == 0 {
+            return 0.0;
+        }
         self.mean_ns / 1e9
     }
 }
@@ -66,15 +69,28 @@ impl Bench {
             }
         }
         samples.sort_by(|a, b| a.total_cmp(b));
-        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
-        let rec = Record {
-            label: label.to_string(),
-            iters: samples.len() as u64,
-            mean_ns: mean,
-            p50_ns: samples[samples.len() / 2],
-            p95_ns: samples[(samples.len() as f64 * 0.95) as usize % samples.len()],
+        // guard the empty case: mean/quantiles of no samples are 0, not
+        // a division by zero / index panic
+        let rec = if samples.is_empty() {
+            Record {
+                label: label.to_string(),
+                iters: 0,
+                mean_ns: 0.0,
+                p50_ns: 0.0,
+                p95_ns: 0.0,
+            }
+        } else {
+            Record {
+                label: label.to_string(),
+                iters: samples.len() as u64,
+                mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+                p50_ns: samples[samples.len() / 2],
+                p95_ns: samples[(samples.len() as f64 * 0.95) as usize % samples.len()],
+            }
         };
-        println!(
+        // stderr, not stdout: bench binaries may have their stdout piped
+        // into JSON consumers, and progress lines must not corrupt that
+        eprintln!(
             "{:<44} {:>10}/iter  p50 {:>10}  p95 {:>10}  ({} iters)",
             format!("{}/{}", self.name, label),
             fmt_ns(rec.mean_ns),
@@ -82,12 +98,41 @@ impl Bench {
             fmt_ns(rec.p95_ns),
             rec.iters
         );
+        crate::obs::event(
+            "bench",
+            &[
+                ("bench", self.name.as_str().into()),
+                ("label", rec.label.as_str().into()),
+                ("iters", rec.iters.into()),
+                ("mean_ns", rec.mean_ns.into()),
+                ("p50_ns", rec.p50_ns.into()),
+                ("p95_ns", rec.p95_ns.into()),
+            ],
+        );
         self.results.push(rec.clone());
         rec
     }
 
+    /// Persist the results as a markdown section under results/bench.md
+    /// and summarize on stderr (stdout stays clean for piped consumers).
     pub fn report(&self) {
-        println!("-- {} done ({} cases)", self.name, self.results.len());
+        let mut md = format!("## bench {}\n\n", self.name);
+        md.push_str("| case | mean/iter | p50 | p95 | iters |\n");
+        md.push_str("| --- | --- | --- | --- | --- |\n");
+        for r in &self.results {
+            md.push_str(&format!(
+                "| {} | {} | {} | {} | {} |\n",
+                r.label,
+                fmt_ns(r.mean_ns),
+                fmt_ns(r.p50_ns),
+                fmt_ns(r.p95_ns),
+                r.iters
+            ));
+        }
+        if let Err(e) = crate::report::append_log("bench.md", &md) {
+            eprintln!("[bench] could not write results/bench.md: {e:#}");
+        }
+        eprintln!("-- {} done ({} cases)", self.name, self.results.len());
     }
 
     pub fn results(&self) -> &[Record] {

@@ -68,6 +68,56 @@ impl Json {
             _ => bail!("not an array: {self:?}"),
         }
     }
+
+    /// Serialize to compact JSON text. Non-finite numbers become `null`
+    /// (JSON has no NaN/Inf), so `dump` output always re-parses.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.dump_into(&mut out);
+        out
+    }
+
+    fn dump_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    out.push_str(&format!("{n}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                out.push_str(&escape(s));
+                out.push('"');
+            }
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.dump_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('"');
+                    out.push_str(&escape(k));
+                    out.push_str("\":");
+                    v.dump_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
 }
 
 struct Parser<'a> {
@@ -258,6 +308,17 @@ mod tests {
         assert!(Json::parse("{").is_err());
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
+    }
+
+    #[test]
+    fn dump_roundtrips() {
+        let text = r#"{"a":[1,2.5,null,true],"b":{"c":"x\ny"},"d":-0.125}"#;
+        let j = Json::parse(text).unwrap();
+        assert_eq!(Json::parse(&j.dump()).unwrap(), j);
+        // non-finite numbers degrade to null, stay parseable
+        let bad = Json::Num(f64::NAN);
+        assert_eq!(bad.dump(), "null");
+        assert_eq!(Json::parse(&bad.dump()).unwrap(), Json::Null);
     }
 
     #[test]
