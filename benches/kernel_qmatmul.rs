@@ -31,6 +31,20 @@ fn main() {
             b.iter(&format!("packed w{bits} m={m}"), || {
                 std::hint::black_box(pl.forward(&x));
             });
+            // the serving hot path: preallocated output, no per-call alloc
+            let mut out = vec![0.0f32; m * o];
+            b.iter(&format!("packed w{bits} m={m} into"), || {
+                pl.forward_into(&x.data, m, &mut out);
+                std::hint::black_box(&out);
+            });
+            if m == 1 {
+                // word-at-a-time row decode underlying both paths
+                let mut row = vec![0.0f32; k];
+                b.iter(&format!("dequant row w{bits}"), || {
+                    pl.dequant_row_into(0, &mut row);
+                    std::hint::black_box(&row);
+                });
+            }
         }
     }
 

@@ -20,18 +20,24 @@ fn main() -> anyhow::Result<()> {
     let corpus = Corpus::new(CorpusKind::WikiLike, base.cfg.vocab_size);
     let gen = 32usize;
 
-    println!("{:<12} {:>10} {:>12} {:>12}", "bitwidth", "WM", "TP_1", "TP_16");
+    println!(
+        "{:<12} {:>10} {:>12} {:>12} {:>12}",
+        "bitwidth", "WM", "TP_1", "TP_16", "PF_16"
+    );
     let mut run = |label: &str, model: &ServeModel| -> anyhow::Result<()> {
         let p1 = vec![corpus.sample(16, 0)];
         let (_, s1) = model.generate(&p1, gen)?;
         let p16: Vec<Vec<i32>> = (0..16).map(|i| corpus.sample(16, i as u64)).collect();
         let (_, s16) = model.generate(&p16, gen)?;
+        // TP_n = generated tokens/s (decode loop only, like the paper);
+        // PF_16 = prompt tokens/s through the batched prefill
         println!(
-            "{:<12} {:>10} {:>12.1} {:>12.1}",
+            "{:<12} {:>10} {:>12.1} {:>12.1} {:>12.1}",
             label,
             fmt_bytes(model.weight_bytes()),
             s1.tokens_per_s,
-            s16.tokens_per_s
+            s16.tokens_per_s,
+            s16.prefill_tokens_per_s
         );
         Ok(())
     };

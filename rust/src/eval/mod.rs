@@ -125,10 +125,7 @@ impl<'e> Evaluator<'e> {
                 let mut scores = [0.0f64; 2];
                 for ci in 0..2 {
                     let (row, start, len) = spans[slot * 2 + ci];
-                    // nll[r, p] is the NLL of predicting token p+1; the
-                    // candidate occupies positions start..start+len, so we
-                    // sum nll at p = start-1 .. start+len-2.
-                    for p in (start - 1)..(start + len - 1) {
+                    for p in cand_nll_range(start, len) {
                         scores[ci] += nll.data[row * w + p] as f64;
                     }
                 }
@@ -162,5 +159,46 @@ impl<'e> Evaluator<'e> {
         }
         out.push(("Avg".to_string(), sum / 5.0));
         Ok(out)
+    }
+}
+
+/// NLL positions scoring a candidate at `start..start+len` in a packed
+/// row. `nll[r, p]` is the NLL of predicting token p+1, so the candidate
+/// is scored at p = start-1 .. start+len-2 — EXCEPT when the task prefix
+/// is empty (start == 0): the candidate's first token has no conditioning
+/// position, so scoring starts at p = 0 (its second token). The old
+/// unguarded `start - 1` underflowed usize and panicked on such tasks.
+pub fn cand_nll_range(start: usize, len: usize) -> std::ops::Range<usize> {
+    if len == 0 {
+        return 0..0;
+    }
+    start.saturating_sub(1)..start + len - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::cand_nll_range;
+
+    #[test]
+    fn cand_range_with_prefix() {
+        // prefix of 3, candidate of 2 at positions 3..5: scored at p=2,3
+        assert_eq!(cand_nll_range(3, 2), 2..4);
+        // single-token candidate after a prefix: one position
+        assert_eq!(cand_nll_range(5, 1), 4..5);
+    }
+
+    #[test]
+    fn cand_range_empty_prefix_does_not_underflow() {
+        // the regression: start == 0 used to compute (0usize - 1)
+        let r = cand_nll_range(0, 4);
+        assert_eq!(r, 0..3);
+        // a 1-token candidate with no prefix has nothing to score
+        assert_eq!(cand_nll_range(0, 1), 0..0);
+    }
+
+    #[test]
+    fn cand_range_empty_candidate_is_empty() {
+        assert_eq!(cand_nll_range(7, 0), 0..0);
+        assert_eq!(cand_nll_range(0, 0), 0..0);
     }
 }

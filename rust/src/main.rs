@@ -5,6 +5,7 @@
 //!   repro calibrate --size tiny --quant W2A16g128 [--method tesseraq]
 //!   repro eval      --size tiny [--ckpt PATH] [--quant ...]
 //!   repro serve     --size tiny --bits 4 [--batch 16] [--new 64]
+//!   repro serve-bench [--size nano] [--bits 16,2,3,4]   artifact-free serving bench
 //!   repro table N   [--fast]       regenerate paper table N
 //!   repro figure N  [--fast]       regenerate paper figure N
 //!   repro e2e       [--fast]       full train->quantize->eval->serve run
@@ -145,6 +146,7 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         "eval" => cmd_eval(args),
         "serve" => cmd_serve(args),
+        "serve-bench" => cmd_serve_bench(args),
         "table" => {
             let id: u32 = args.positional.get(1).context("table N")?.parse()?;
             let mut ctx = Ctx::new(args.fast())?;
@@ -189,6 +191,11 @@ const HELP: &str = "repro — TesseraQ reproduction launcher
             render self-time profile + per-block loss table from a trace
   eval      --size S [--ckpt PATH] [--corpus wiki|c4]
   serve     --size S --bits 2|3|4 [--batch B] [--new N]
+  serve-bench [--size nano] [--bits 16,2,3,4] [--batch 4] [--prompt 16] [--new 32]
+            artifact-free serving benchmark on a random-init model with
+            host-side RTN packing; ragged prompts exercise the padded
+            decode path; writes results/BENCH_serve.json
+            (TESSERAQ_BENCH_MS sets the per-case measurement budget)
   table N   [--fast]        regenerate paper table N (1-12)
   figure N  [--fast]        regenerate paper figure N (2-4)
   all-tables [--fast]
@@ -351,13 +358,116 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let prompts: Vec<Vec<i32>> = (0..batch).map(|i| calib.sample(16, i as u64)).collect();
     let (outs, stats) = model.generate(&prompts, max_new)?;
     println!(
-        "{}: batch={} weight_mem={} throughput={:.1} tok/s",
+        "{}: batch={} weight_mem={} decode={:.1} tok/s prefill={:.1} tok/s",
         stats.label,
         stats.batch,
         tesseraq::report::fmt_bytes(stats.weight_bytes),
-        stats.tokens_per_s
+        stats.tokens_per_s,
+        stats.prefill_tokens_per_s
     );
     println!("sample continuation: {:?}", &outs[0][..outs[0].len().min(16)]);
+    Ok(())
+}
+
+/// Artifact-free serving benchmark: random-init weights, host-side RTN
+/// packing — measures the ragged-batch serve hot path (batched vs
+/// per-token prefill, steady-state decode) for dense and packed models
+/// and writes results/BENCH_serve.json. Runs anywhere (CI included):
+/// kernel throughput does not depend on how the codes were calibrated.
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    use std::collections::BTreeMap;
+    use tesseraq::serve::PrefillMode;
+    use tesseraq::util::bench::Bench;
+    use tesseraq::util::json::Json;
+
+    let size = args.flag("size").unwrap_or("nano").to_string();
+    let cfg = ModelConfig::preset(&size)?;
+    let batch: usize = args.flag("batch").unwrap_or("4").parse()?;
+    let prompt_len: usize = args.flag("prompt").unwrap_or("16").parse()?;
+    let max_new: usize = args.flag("new").unwrap_or("32").parse()?;
+    let bits_list: Vec<u32> = args
+        .flag("bits")
+        .unwrap_or("16,2,3,4")
+        .split(',')
+        .map(|s| s.trim().parse())
+        .collect::<Result<_, _>>()?;
+    if batch == 0 || prompt_len < 2 || max_new == 0 {
+        bail!("serve-bench needs batch >= 1, prompt >= 2, new >= 1");
+    }
+
+    let mut rng = Pcg32::seeded(0xBE7C);
+    let params = Params::init(&cfg, &mut rng);
+    // ragged on purpose: odd rows get half-length prompts so the bench
+    // exercises the padding/masking path, not just the aligned one
+    let prompts: Vec<Vec<i32>> = (0..batch)
+        .map(|r| {
+            let len = if r % 2 == 1 { (prompt_len / 2).max(1) } else { prompt_len };
+            (0..len).map(|_| rng.below(cfg.vocab_size) as i32).collect()
+        })
+        .collect();
+    let plens: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
+
+    println!(
+        "serve-bench: {size} batch={batch} prompts={plens:?} new={max_new} threads={}",
+        tesseraq::util::n_threads()
+    );
+    let mut b = Bench::new("serve");
+    let mut cases = Vec::new();
+    for &bits in &bits_list {
+        let model = if bits >= 16 {
+            ServeModel::dense(&params)
+        } else {
+            ServeModel::packed_rtn(&params, bits)?
+        };
+        // one checked run per prefill mode: surfaces errors and records
+        // stats before the timing loop discards results
+        let (_, st_b) = model.generate_with(&prompts, max_new, PrefillMode::Batched)?;
+        let (_, st_t) = model.generate_with(&prompts, max_new, PrefillMode::PerToken)?;
+        let rec = b.iter(&model.label, || {
+            let _ = std::hint::black_box(model.generate(&prompts, max_new));
+        });
+        println!(
+            "{:>12}: {} weights, decode {:.1} tok/s, prefill {:.1} vs {:.1} tok/s",
+            st_b.label,
+            tesseraq::report::fmt_bytes(st_b.weight_bytes),
+            st_b.tokens_per_s,
+            st_b.prefill_tokens_per_s,
+            st_t.prefill_tokens_per_s,
+        );
+        let mut c = BTreeMap::new();
+        c.insert("label".to_string(), Json::Str(st_b.label.clone()));
+        c.insert("bits".to_string(), Json::Num(bits as f64));
+        c.insert("weight_bytes".to_string(), Json::Num(st_b.weight_bytes as f64));
+        c.insert("decode_tok_s".to_string(), Json::Num(st_b.tokens_per_s));
+        c.insert(
+            "prefill_tok_s_batched".to_string(),
+            Json::Num(st_b.prefill_tokens_per_s),
+        );
+        c.insert(
+            "prefill_tok_s_per_token".to_string(),
+            Json::Num(st_t.prefill_tokens_per_s),
+        );
+        c.insert("generate_mean_ns".to_string(), Json::Num(rec.mean_ns));
+        c.insert("generate_p50_ns".to_string(), Json::Num(rec.p50_ns));
+        c.insert("generate_p95_ns".to_string(), Json::Num(rec.p95_ns));
+        c.insert("iters".to_string(), Json::Num(rec.iters as f64));
+        cases.push(Json::Obj(c));
+    }
+    b.report();
+
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("serve".to_string()));
+    top.insert("size".to_string(), Json::Str(size.clone()));
+    top.insert("batch".to_string(), Json::Num(batch as f64));
+    top.insert(
+        "prompt_lens".to_string(),
+        Json::Arr(plens.iter().map(|&l| Json::Num(l as f64)).collect()),
+    );
+    top.insert("new_tokens".to_string(), Json::Num(max_new as f64));
+    top.insert("threads".to_string(), Json::Num(tesseraq::util::n_threads() as f64));
+    top.insert("cases".to_string(), Json::Arr(cases));
+    let path = tesseraq::report::write_json("BENCH_serve", &Json::Obj(top).dump())?;
+    println!("wrote {}", path.display());
     Ok(())
 }
 

@@ -19,6 +19,14 @@ pub trait LinearOp: Sync {
     fn in_features(&self) -> usize;
     /// x: [rows, in] -> [rows, out]
     fn forward(&self, x: &Tensor) -> Tensor;
+    /// `forward` into a caller-provided buffer: x is [m, in] flattened,
+    /// `out.len() == m * out_features`. The serving decode loop runs every
+    /// linear through this so steady-state decoding allocates nothing; the
+    /// default falls back to `forward` for exotic impls.
+    fn forward_into(&self, x: &[f32], m: usize, out: &mut [f32]) {
+        let y = self.forward(&Tensor::new(vec![m, self.in_features()], x.to_vec()));
+        out.copy_from_slice(&y.data);
+    }
     /// Weight memory footprint in bytes (Table 8).
     fn weight_bytes(&self) -> usize;
 }
@@ -32,6 +40,9 @@ impl LinearOp for Tensor {
     }
     fn forward(&self, x: &Tensor) -> Tensor {
         linalg::matmul_bt(x, self)
+    }
+    fn forward_into(&self, x: &[f32], m: usize, out: &mut [f32]) {
+        linalg::matmul_bt_into(x, m, self.shape[1], &self.data, self.shape[0], out);
     }
     fn weight_bytes(&self) -> usize {
         // FP16 reference footprint (the paper's FP16 baseline), not f32:

@@ -10,8 +10,8 @@ use anyhow::{bail, Result};
 
 use crate::model::hostfwd::LinearOp;
 use crate::quant::QParams;
-use crate::tensor::Tensor;
-use crate::util::parallel_rows;
+use crate::tensor::{linalg, Tensor};
+use crate::util::parallel_chunks;
 
 #[derive(Debug, Clone)]
 pub struct PackedLinear {
@@ -81,6 +81,54 @@ impl PackedLinear {
         let codes = unpack_codes(&self.words, self.out_features, self.in_features, self.bits);
         crate::quant::dequant_codes(&codes, self.out_features, self.in_features, &self.qp)
     }
+
+    /// Decode packed weight row `j` into `out[..in_features]`.
+    ///
+    /// This is the serving kernel's inner decode: each u32 word is loaded
+    /// once and its `per_word` codes peeled off by shifting the register
+    /// (no per-code word/offset division), and the group scale/zero pair
+    /// is re-read only at group boundaries, not per code.
+    #[inline]
+    pub fn dequant_row_into(&self, j: usize, out: &mut [f32]) {
+        let k = self.in_features;
+        debug_assert!(out.len() >= k);
+        if k == 0 {
+            return;
+        }
+        let bits = self.bits;
+        let pw = per_word(bits);
+        let mask = (1u32 << bits) - 1;
+        let g = self.qp.group;
+        let ng = self.qp.n_groups();
+        let srow = &self.qp.s.data[j * ng..(j + 1) * ng];
+        let zrow = &self.qp.z.data[j * ng..(j + 1) * ng];
+        let wrow = &self.words[j * self.n_words..(j + 1) * self.n_words];
+        let mut gi = 0usize;
+        let mut s = srow[0];
+        let mut z = zrow[0];
+        let mut next_edge = g.min(k);
+        let mut widx = 0usize;
+        let mut word = wrow[0];
+        let mut left = pw;
+        for (c, o) in out[..k].iter_mut().enumerate() {
+            if c == next_edge {
+                gi += 1;
+                s = srow[gi];
+                z = zrow[gi];
+                next_edge = ((gi + 1) * g).min(k);
+            }
+            *o = s * ((word & mask) as f32 - z);
+            word >>= bits;
+            left -= 1;
+            if left == 0 {
+                widx += 1;
+                if widx < wrow.len() {
+                    word = wrow[widx];
+                }
+                left = pw;
+            }
+        }
+    }
 }
 
 impl LinearOp for PackedLinear {
@@ -94,50 +142,59 @@ impl LinearOp for PackedLinear {
 
     /// Fused unpack + dequant + matvec/matmul: y = x @ dequant(W).T.
     ///
-    /// The hot loop dequantizes one weight row group-by-group into
-    /// registers and runs the dot product immediately — weights are read
-    /// once in packed form (memory-bound regime, like the paper's
-    /// Exllama/Triton kernels).
+    /// Weight-stationary and memory-bound like the paper's Exllama/Triton
+    /// kernels: each worker owns a contiguous cache block of output rows,
+    /// decodes each packed row exactly once into a per-worker scratch
+    /// buffer (`dequant_row_into` — whole-word decode, group lookups
+    /// hoisted), and runs the unrolled dot against every input row while
+    /// the decoded weights are still hot.
     fn forward(&self, x: &Tensor) -> Tensor {
         let (m, k) = x.dims2();
         assert_eq!(k, self.in_features);
+        let mut out = vec![0.0f32; m * self.out_features];
+        self.forward_into(&x.data, m, &mut out);
+        Tensor::new(vec![m, self.out_features], out)
+    }
+
+    fn forward_into(&self, x: &[f32], m: usize, out: &mut [f32]) {
+        let k = self.in_features;
         let o = self.out_features;
-        let bits = self.bits;
-        let pw = per_word(bits);
-        let mask = (1u32 << bits) - 1;
-        let g = self.qp.group;
-        let ng = self.qp.n_groups();
-        let mut out = vec![0.0f32; m * o];
-        // Parallelize over output rows (weight-stationary): each worker
-        // dequantizes a weight row once and applies it to all m inputs.
-        let xm = &x.data;
-        let mut outt = vec![0.0f32; o * m]; // transposed accumulation
-        parallel_rows(&mut outt, m, |j, orow| {
-            let wrow = &self.words[j * self.n_words..(j + 1) * self.n_words];
-            let mut wdeq = vec![0.0f32; k];
-            for c in 0..k {
-                let code = (wrow[c / pw] >> (bits as usize * (c % pw))) & mask;
-                let gi = c / g;
-                let s = self.qp.s.data[j * ng + gi];
-                let z = self.qp.z.data[j * ng + gi];
-                wdeq[c] = s * (code as f32 - z);
-            }
-            for (i, ov) in orow.iter_mut().enumerate() {
-                let xi = &xm[i * k..(i + 1) * k];
-                let mut acc = 0.0f32;
-                for t in 0..k {
-                    acc += xi[t] * wdeq[t];
+        assert_eq!(x.len(), m * k, "x len vs [{m}, {k}]");
+        assert_eq!(out.len(), m * o, "out len vs [{m}, {o}]");
+        if m == 1 {
+            // Matvec (the decode step): out is already the [o] column, no
+            // transpose needed.
+            let out_ptr = out.as_ptr() as usize;
+            parallel_chunks(o, |_, s0, e0| {
+                let ov = unsafe { std::slice::from_raw_parts_mut(out_ptr as *mut f32, o) };
+                let mut wdeq = vec![0.0f32; k];
+                for j in s0..e0 {
+                    self.dequant_row_into(j, &mut wdeq);
+                    ov[j] = linalg::dot_unrolled(x, &wdeq);
                 }
-                *ov = acc;
+            });
+            return;
+        }
+        // Batched: accumulate transposed [o, m] so each decoded weight row
+        // writes one contiguous slice, then transpose back.
+        let outt = vec![0.0f32; o * m];
+        let outt_ptr = outt.as_ptr() as usize;
+        parallel_chunks(o, |_, s0, e0| {
+            let ot = unsafe { std::slice::from_raw_parts_mut(outt_ptr as *mut f32, o * m) };
+            let mut wdeq = vec![0.0f32; k];
+            for j in s0..e0 {
+                self.dequant_row_into(j, &mut wdeq);
+                let orow = &mut ot[j * m..(j + 1) * m];
+                for (i, ov) in orow.iter_mut().enumerate() {
+                    *ov = linalg::dot_unrolled(&x[i * k..(i + 1) * k], &wdeq);
+                }
             }
         });
-        // transpose back [o, m] -> [m, o]
         for j in 0..o {
             for i in 0..m {
                 out[i * o + j] = outt[j * m + i];
             }
         }
-        Tensor::new(vec![m, o], out)
     }
 
     fn weight_bytes(&self) -> usize {
@@ -202,6 +259,64 @@ mod tests {
                 let pl = PackedLinear::from_codes(&codes, o, i, bits, qp).unwrap();
                 let got = pl.dequant_dense();
                 assert_eq!(got.data, want.data, "bits={bits} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_forward_matches_dequant_dense_proptest() {
+        // The fused kernel must agree with dequant-then-dense-matmul for
+        // arbitrary ragged shapes: partial tail words (bits=3 packs 10
+        // codes/word, so most widths leave one), partial tail groups, and
+        // group edges that fall mid-word.
+        crate::util::proptest(48, 0xA11CE, |rng| {
+            let bits = [2u32, 3, 4][rng.below(3)];
+            let o = 1 + rng.below(7);
+            let i = 1 + rng.below(79);
+            let g = 1 + rng.below(i);
+            let ng = i.div_ceil(g);
+            let m = 1 + rng.below(5);
+            let codes: Vec<u16> =
+                (0..o * i).map(|_| rng.below(1 << bits) as u16).collect();
+            let s = Tensor::from_fn(&[o, ng], |_| 0.02 + rng.uniform() as f32);
+            let z = Tensor::from_fn(&[o, ng], |_| rng.below(1 << bits) as f32);
+            let qp = QParams { s, z, group: g };
+            let pl = PackedLinear::from_codes(&codes, o, i, bits, qp).unwrap();
+            let x = Tensor::randn(&[m, i], 1.0, rng);
+            let want = pl.dequant_dense().matmul_bt(&x);
+            let got = pl.forward(&x);
+            assert_eq!(got.shape, want.shape);
+            for (t, (a, b)) in got.data.iter().zip(&want.data).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-4,
+                    "bits={bits} o={o} i={i} g={g} m={m} elem {t}: {a} vs {b}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn dequant_row_into_matches_dequant_dense() {
+        // Word-at-a-time row decode must be bit-exact against the
+        // reference unpack across bit widths and tail columns.
+        let mut rng = Pcg32::seeded(7);
+        for bits in [2u32, 3, 4] {
+            for i in [10usize, 31, 37, 64] {
+                let o = 3;
+                let g = 16.min(i);
+                let ng = i.div_ceil(g);
+                let codes: Vec<u16> =
+                    (0..o * i).map(|_| rng.below(1 << bits) as u16).collect();
+                let s = Tensor::from_fn(&[o, ng], |_| 0.1 + rng.uniform() as f32);
+                let z = Tensor::from_fn(&[o, ng], |_| rng.below(1 << bits) as f32);
+                let qp = QParams { s, z, group: g };
+                let pl = PackedLinear::from_codes(&codes, o, i, bits, qp).unwrap();
+                let dense = pl.dequant_dense();
+                let mut row = vec![0.0f32; i];
+                for j in 0..o {
+                    pl.dequant_row_into(j, &mut row);
+                    assert_eq!(&row, &dense.data[j * i..(j + 1) * i], "bits={bits} i={i} j={j}");
+                }
             }
         }
     }

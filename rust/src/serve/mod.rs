@@ -1,7 +1,12 @@
 //! Quantized serving path (Table 8): batched greedy decoding with a KV
 //! cache over packed INT{2,3,4} weights (Rust-native fused dequant
 //! kernels, quant::pack) or dense f32 weights (the FP16-equivalent
-//! baseline). Reports weight memory and tokens/second.
+//! baseline). Reports weight memory and prefill/decode throughput.
+//!
+//! Ragged batches are first-class: the KV cache keeps a per-row validity
+//! mask and per-row positions, so a short prompt decodes exactly the same
+//! tokens whether it is served solo or padded alongside longer batchmates
+//! (see README "Serving" for the layout and masking contract).
 
 use std::collections::BTreeMap;
 
@@ -12,6 +17,7 @@ use crate::model::hostfwd::{rmsnorm_rows, silu, LinearOp};
 use crate::model::{ModelConfig, Params, LINEAR_NAMES};
 use crate::quant::pack::PackedLinear;
 use crate::tensor::{linalg, Tensor};
+use crate::util::parallel_chunks;
 
 /// A servable model: embedding + per-block linear ops (dense or packed).
 pub struct ServeModel {
@@ -89,6 +95,50 @@ impl ServeModel {
         })
     }
 
+    /// Packed model quantized host-side with plain RTN — no calibration
+    /// artifacts or engine needed. This is the `repro serve-bench` path:
+    /// kernel throughput does not depend on how the codes were chosen, so
+    /// a CI box without compiled artifacts can still measure the packed
+    /// hot path. Group size per linear: the largest power of two <= 128
+    /// dividing its input features.
+    pub fn packed_rtn(params: &Params, bits: u32) -> Result<ServeModel> {
+        use crate::quant::{minmax_scale, rtn_codes, ClipFactors};
+        let cfg = params.cfg.clone();
+        let qmax = (2u32.pow(bits) - 1) as f32;
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let bv = params.block(l);
+            let mut linears: BTreeMap<String, Box<dyn LinearOp>> = BTreeMap::new();
+            for name in LINEAR_NAMES {
+                let w = &bv.linears[name];
+                let (o, i) = cfg.linear_shape(name);
+                let mut g = 128usize;
+                while i % g != 0 {
+                    g /= 2;
+                }
+                let qp = minmax_scale(
+                    w,
+                    g,
+                    &ClipFactors::Uniform(1.0),
+                    &ClipFactors::Uniform(1.0),
+                    qmax,
+                );
+                let codes = rtn_codes(w, &qp, qmax);
+                let pl = PackedLinear::from_codes(&codes, o, i, bits, qp)
+                    .with_context(|| format!("packing block {l} {name} (rtn)"))?;
+                linears.insert(name.to_string(), Box::new(pl) as Box<dyn LinearOp>);
+            }
+            blocks.push(ServeBlock { linears, norm1: bv.norm1, norm2: bv.norm2 });
+        }
+        Ok(ServeModel {
+            cfg: cfg.clone(),
+            emb: params.get("emb").clone(),
+            norm_f: params.get("norm_f").clone(),
+            blocks,
+            label: format!("W{bits} RTN"),
+        })
+    }
+
     /// Weight memory in bytes (Table 8 "WM" column; FP16 reference for
     /// dense tensors).
     pub fn weight_bytes(&self) -> usize {
@@ -103,48 +153,198 @@ impl ServeModel {
     }
 }
 
-/// KV cache for one decode session: [layer][b, t, d_kv] grown per step.
+/// KV cache for one decode session.
+///
+/// Layout: `k[layer]` / `v[layer]` are flat `[t][b][d_kv]` buffers
+/// (time-major so one decode step appends a single contiguous `[b][d_kv]`
+/// slab), preallocated to a slot capacity — the steady-state decode loop
+/// never reallocates. Ragged batches share the time axis: slot `t` holds
+/// row `r`'s token only if `valid[t * b + r]`; padded slots stay in the
+/// buffers but are masked out of every attention softmax, and `row_pos[r]`
+/// tracks each row's own token count (== its next RoPE position), which
+/// is what keeps a short row's math identical to a solo run.
 pub struct KvCache {
     pub k: Vec<Vec<f32>>,
     pub v: Vec<Vec<f32>>,
+    /// Cache slots filled so far (shared time axis, includes padding).
     pub len: usize,
+    cap: usize,
     b: usize,
     d_kv: usize,
+    /// `valid[slot * b + r]`: slot holds a real (non-padding) token of row r.
+    valid: Vec<bool>,
+    /// Per-row count of real tokens == that row's next RoPE position.
+    row_pos: Vec<usize>,
 }
 
 impl KvCache {
     pub fn new(cfg: &ModelConfig, b: usize) -> KvCache {
+        Self::with_capacity(cfg, b, 16)
+    }
+
+    /// Preallocate `cap` cache slots so the decode loop never grows the
+    /// buffers. `generate` sizes this as prompt_len + max_new.
+    pub fn with_capacity(cfg: &ModelConfig, b: usize, cap: usize) -> KvCache {
+        let cap = cap.max(1);
+        let d_kv = cfg.d_kv();
         KvCache {
-            k: vec![Vec::new(); cfg.n_layers],
-            v: vec![Vec::new(); cfg.n_layers],
+            k: vec![vec![0.0; cap * b * d_kv]; cfg.n_layers],
+            v: vec![vec![0.0; cap * b * d_kv]; cfg.n_layers],
             len: 0,
+            cap,
             b,
-            d_kv: cfg.d_kv(),
+            d_kv,
+            valid: vec![false; cap * b],
+            row_pos: vec![0; b],
         }
     }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Row r's own token count (its next RoPE position).
+    pub fn row_pos(&self, r: usize) -> usize {
+        self.row_pos[r]
+    }
+
+    /// Grow to at least `need` slots (doubling; no-op within capacity).
+    fn reserve(&mut self, need: usize) {
+        if need <= self.cap {
+            return;
+        }
+        let cap = need.next_power_of_two().max(self.cap * 2);
+        for kl in self.k.iter_mut() {
+            kl.resize(cap * self.b * self.d_kv, 0.0);
+        }
+        for vl in self.v.iter_mut() {
+            vl.resize(cap * self.b * self.d_kv, 0.0);
+        }
+        self.valid.resize(cap * self.b, false);
+        self.cap = cap;
+    }
+}
+
+/// Reusable per-session buffers for `decode_step`: activations, q/k/v,
+/// attention context, MLP intermediates, logits, and per-worker softmax
+/// score slabs. One allocation up front, zero in the steady-state loop.
+pub struct DecodeScratch {
+    x: Vec<f32>,
+    h: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    ctx: Vec<f32>,
+    proj: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    mlp: Vec<f32>,
+    logits: Vec<f32>,
+    scores: Vec<f32>,
+    score_cap: usize,
+}
+
+impl DecodeScratch {
+    pub fn new(cfg: &ModelConfig, b: usize) -> DecodeScratch {
+        let d = cfg.d_model;
+        let dkv = cfg.d_kv();
+        let f = cfg.d_ff;
+        DecodeScratch {
+            x: vec![0.0; b * d],
+            h: vec![0.0; b * d],
+            q: vec![0.0; b * d],
+            k: vec![0.0; b * dkv],
+            v: vec![0.0; b * dkv],
+            ctx: vec![0.0; b * d],
+            proj: vec![0.0; b * d],
+            gate: vec![0.0; b * f],
+            up: vec![0.0; b * f],
+            mlp: vec![0.0; b * f],
+            logits: vec![0.0; b * cfg.vocab_size],
+            scores: Vec::new(),
+            score_cap: 0,
+        }
+    }
+
+    /// Size the per-worker softmax slabs for `workers` workers and `t`
+    /// cache slots. Grows in power-of-two steps, so a generation session
+    /// reallocates O(log t) times, not per step.
+    fn ensure_scores(&mut self, workers: usize, t: usize) {
+        let cap = t.next_power_of_two();
+        if self.score_cap < cap || self.scores.len() < workers * cap {
+            self.score_cap = cap;
+            self.scores = vec![0.0; workers * cap];
+        }
+    }
+}
+
+/// How `generate` runs the prompt through the model before decoding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefillMode {
+    /// One multi-token forward over the whole (padded) prompt batch — the
+    /// fast path and the default.
+    Batched,
+    /// Token-by-token through the decode step — the benchmark baseline
+    /// the batched path is measured against.
+    PerToken,
 }
 
 pub struct DecodeStats {
     pub label: String,
     pub batch: usize,
+    /// Longest prompt in the batch (the shared cache prefix length).
     pub prompt_len: usize,
+    /// Per-row prompt lengths; differs per row for ragged batches.
+    pub prompt_lens: Vec<usize>,
     pub new_tokens: usize,
+    /// Prefill wall seconds — recorded separately so `tokens_per_s`
+    /// (decode only, the paper's TP_n) is auditable.
+    pub prefill_s: f64,
+    /// Decode-loop wall seconds.
+    pub decode_s: f64,
+    /// Generated tokens per second (decode loop only).
     pub tokens_per_s: f64,
+    /// Real prompt tokens per second through prefill.
+    pub prefill_tokens_per_s: f64,
     pub weight_bytes: usize,
 }
 
+fn argmax_row(row: &[f32]) -> i32 {
+    // total_cmp: NaN logits (e.g. a degenerate quantized model) must not
+    // panic the decode loop
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i as i32)
+        .unwrap_or(0)
+}
+
 impl ServeModel {
-    /// One decode step for batch `b`: last-token activations [b, d] ->
-    /// next-token ids [b]. Appends to the cache.
-    fn decode_step(&self, x_tok: &[i32], cache: &mut KvCache) -> Vec<i32> {
+    /// One decode step for batch `b`: token ids `x_tok` [b] -> greedy
+    /// next-token ids [b], appending one slot to the cache.
+    /// `step_valid[r]` marks whether row r's token is real; a padding
+    /// token's k/v are written but masked out of that row's attention for
+    /// the rest of the session, and its `row_pos` does not advance.
+    fn decode_step(
+        &self,
+        x_tok: &[i32],
+        step_valid: &[bool],
+        cache: &mut KvCache,
+        scratch: &mut DecodeScratch,
+    ) -> Vec<i32> {
         let cfg = &self.cfg;
         let b = cache.b;
+        debug_assert_eq!(x_tok.len(), b);
+        debug_assert_eq!(step_valid.len(), b);
         let d = cfg.d_model;
-        let pos = cache.len;
+        let slot = cache.len;
+        cache.reserve(slot + 1);
+        let t = slot + 1;
+        let dkv = cache.d_kv;
+
         // embed
-        let mut x = vec![0.0f32; b * d];
         for (r, &tok) in x_tok.iter().enumerate() {
-            x[r * d..(r + 1) * d]
+            scratch.x[r * d..(r + 1) * d]
                 .copy_from_slice(&self.emb.data[tok as usize * d..(tok as usize + 1) * d]);
         }
 
@@ -153,45 +353,83 @@ impl ServeModel {
         let hd = cfg.head_dim();
         let rep = nh / nkv;
         let scale = 1.0 / (hd as f32).sqrt();
+        let workers = crate::util::planned_workers(b * nh);
+        scratch.ensure_scores(workers, t);
+
+        // The current slot's validity must be visible to this step's
+        // attention: every row attends its own just-written slot, while
+        // that row's earlier padding slots stay masked.
+        for r in 0..b {
+            cache.valid[slot * b + r] = step_valid[r];
+        }
 
         for (l, blk) in self.blocks.iter().enumerate() {
-            let mut h = Tensor::new(vec![b, d], x.clone());
-            rmsnorm_rows(&mut h.data, d, &blk.norm1.data, cfg.norm_eps);
-            let q = blk.linears["q_proj"].forward(&h);
-            let mut k = blk.linears["k_proj"].forward(&h);
-            let v = blk.linears["v_proj"].forward(&h);
-            // rope on q (per head) and k (per kv head) at `pos`
-            let mut qd = q.data;
+            scratch.h.copy_from_slice(&scratch.x);
+            rmsnorm_rows(&mut scratch.h, d, &blk.norm1.data, cfg.norm_eps);
+            blk.linears["q_proj"].forward_into(&scratch.h, b, &mut scratch.q);
+            blk.linears["k_proj"].forward_into(&scratch.h, b, &mut scratch.k);
+            blk.linears["v_proj"].forward_into(&scratch.h, b, &mut scratch.v);
+            // RoPE at each row's OWN position (its count of real tokens),
+            // not the shared cache slot — this is what makes a short
+            // prompt's generation identical to its solo run.
             for r in 0..b {
+                let pos = cache.row_pos[r];
                 for hi in 0..nh {
-                    rope_row(&mut qd[r * d + hi * hd..r * d + (hi + 1) * hd], pos, cfg.rope_theta);
+                    rope_row(
+                        &mut scratch.q[r * d + hi * hd..r * d + (hi + 1) * hd],
+                        pos,
+                        cfg.rope_theta,
+                    );
                 }
                 for hi in 0..nkv {
                     rope_row(
-                        &mut k.data[r * cfg.d_kv() + hi * hd..r * cfg.d_kv() + (hi + 1) * hd],
+                        &mut scratch.k[r * dkv + hi * hd..r * dkv + (hi + 1) * hd],
                         pos,
                         cfg.rope_theta,
                     );
                 }
             }
-            cache.k[l].extend_from_slice(&k.data);
-            cache.v[l].extend_from_slice(&v.data);
+            let off = slot * b * dkv;
+            cache.k[l][off..off + b * dkv].copy_from_slice(&scratch.k);
+            cache.v[l][off..off + b * dkv].copy_from_slice(&scratch.v);
 
-            // attention over the cache (t = pos + 1 entries)
-            let t = pos + 1;
-            let dkv = cache.d_kv;
-            let mut ctx = vec![0.0f32; b * d];
-            for r in 0..b {
-                for hi in 0..nh {
+            // attention over the cache, parallel over (row, head) pairs;
+            // disjoint raw-pointer writes (hostfwd idiom) into ctx and the
+            // per-worker score slabs
+            let kl = &cache.k[l];
+            let vl = &cache.v[l];
+            let valid = &cache.valid;
+            let qd: &[f32] = &scratch.q;
+            let ctx_ptr = scratch.ctx.as_ptr() as usize;
+            let score_cap = scratch.score_cap;
+            let scores_ptr = scratch.scores.as_ptr() as usize;
+            parallel_chunks(b * nh, |wk, s0, e0| {
+                let scores = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        (scores_ptr as *mut f32).add(wk * score_cap),
+                        t,
+                    )
+                };
+                for bh in s0..e0 {
+                    let r = bh / nh;
+                    let hi = bh % nh;
                     let kvh = hi / rep;
                     let qrow = &qd[r * d + hi * hd..r * d + (hi + 1) * hd];
-                    let mut scores = vec![0.0f32; t];
                     let mut maxv = f32::NEG_INFINITY;
                     for kt in 0..t {
+                        if kt != slot && !valid[kt * b + r] {
+                            // padding slot for this row: exp(-inf) == 0
+                            // removes it from the denominator and the sum
+                            scores[kt] = f32::NEG_INFINITY;
+                            continue;
+                        }
                         let base = (kt * b + r) * dkv + kvh * hd;
-                        let krow = &cache.k[l][base..base + hd];
-                        let dot: f32 =
-                            qrow.iter().zip(krow).map(|(a, c)| a * c).sum::<f32>() * scale;
+                        let dot: f32 = qrow
+                            .iter()
+                            .zip(&kl[base..base + hd])
+                            .map(|(a, c)| a * c)
+                            .sum::<f32>()
+                            * scale;
                         scores[kt] = dot;
                         maxv = maxv.max(dot);
                     }
@@ -200,61 +438,284 @@ impl ServeModel {
                         *s = (*s - maxv).exp();
                         denom += *s;
                     }
-                    let out = &mut ctx[r * d + hi * hd..r * d + (hi + 1) * hd];
+                    let out = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            (ctx_ptr as *mut f32).add(r * d + hi * hd),
+                            hd,
+                        )
+                    };
+                    out.fill(0.0);
                     for kt in 0..t {
                         let w = scores[kt] / denom;
+                        if w == 0.0 {
+                            continue;
+                        }
                         let base = (kt * b + r) * dkv + kvh * hd;
-                        for (o, &vv) in out.iter_mut().zip(&cache.v[l][base..base + hd]) {
+                        for (o, &vv) in out.iter_mut().zip(&vl[base..base + hd]) {
                             *o += w * vv;
                         }
                     }
                 }
-            }
-            let attn = blk.linears["o_proj"].forward(&Tensor::new(vec![b, d], ctx));
-            for (a, o) in x.iter_mut().zip(&attn.data) {
+            });
+            blk.linears["o_proj"].forward_into(&scratch.ctx, b, &mut scratch.proj);
+            for (a, o) in scratch.x.iter_mut().zip(&scratch.proj) {
                 *a += o;
             }
 
-            let mut h2 = Tensor::new(vec![b, d], x.clone());
-            rmsnorm_rows(&mut h2.data, d, &blk.norm2.data, cfg.norm_eps);
-            let gate = blk.linears["gate_proj"].forward(&h2);
-            let up = blk.linears["up_proj"].forward(&h2);
+            scratch.h.copy_from_slice(&scratch.x);
+            rmsnorm_rows(&mut scratch.h, d, &blk.norm2.data, cfg.norm_eps);
+            blk.linears["gate_proj"].forward_into(&scratch.h, b, &mut scratch.gate);
+            blk.linears["up_proj"].forward_into(&scratch.h, b, &mut scratch.up);
             let f = cfg.d_ff;
-            let mut mlp = vec![0.0f32; b * f];
             for i in 0..b * f {
-                mlp[i] = silu(gate.data[i]) * up.data[i];
+                scratch.mlp[i] = silu(scratch.gate[i]) * scratch.up[i];
             }
-            let down = blk.linears["down_proj"].forward(&Tensor::new(vec![b, f], mlp));
-            for (a, o) in x.iter_mut().zip(&down.data) {
+            blk.linears["down_proj"].forward_into(&scratch.mlp, b, &mut scratch.proj);
+            for (a, o) in scratch.x.iter_mut().zip(&scratch.proj) {
                 *a += o;
             }
         }
-        cache.len += 1;
+        cache.len = t;
+        for r in 0..b {
+            if step_valid[r] {
+                cache.row_pos[r] += 1;
+            }
+        }
 
-        // head: greedy over tied embedding
-        let mut hf = Tensor::new(vec![b, d], x);
-        rmsnorm_rows(&mut hf.data, d, &self.norm_f.data, cfg.norm_eps);
-        let logits = linalg::matmul_bt(&hf, &self.emb);
+        // head: greedy over the tied embedding
+        scratch.h.copy_from_slice(&scratch.x);
+        rmsnorm_rows(&mut scratch.h, d, &self.norm_f.data, cfg.norm_eps);
+        linalg::matmul_bt_into(
+            &scratch.h,
+            b,
+            d,
+            &self.emb.data,
+            cfg.vocab_size,
+            &mut scratch.logits,
+        );
         let v = cfg.vocab_size;
-        (0..b)
-            .map(|r| {
-                let row = &logits.data[r * v..(r + 1) * v];
-                // total_cmp: NaN logits (e.g. a degenerate quantized model)
-                // must not panic the decode loop
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.total_cmp(b.1))
-                    .map(|(i, _)| i as i32)
-                    .unwrap_or(0)
-            })
-            .collect()
+        (0..b).map(|r| argmax_row(&scratch.logits[r * v..(r + 1) * v])).collect()
     }
 
-    /// Batched greedy generation; returns outputs + throughput stats.
+    /// Token-by-token prefill through the decode step (the benchmark
+    /// baseline). Rows past their own prompt end feed a masked padding
+    /// token; each row's first-generation seed is captured at its OWN
+    /// last prompt position.
+    fn prefill_per_token(
+        &self,
+        prompts: &[Vec<i32>],
+        plens: &[usize],
+        cache: &mut KvCache,
+        scratch: &mut DecodeScratch,
+    ) -> Vec<i32> {
+        let b = prompts.len();
+        let tmax = plens.iter().copied().max().unwrap_or(0);
+        let mut last = vec![0i32; b];
+        let mut toks = vec![0i32; b];
+        let mut valid = vec![false; b];
+        for pos in 0..tmax {
+            for r in 0..b {
+                valid[r] = pos < plens[r];
+                toks[r] = if valid[r] { prompts[r][pos] } else { 0 };
+            }
+            let step = self.decode_step(&toks, &valid, cache, scratch);
+            for r in 0..b {
+                if pos + 1 == plens[r] {
+                    last[r] = step[r];
+                }
+            }
+        }
+        last
+    }
+
+    /// Batched prefill: one multi-token forward over the padded `[b,
+    /// tmax]` prompt batch, filling the KV cache and returning each row's
+    /// greedy next token from its OWN last prompt position. During
+    /// prefill a row's real tokens are left-aligned, so slot index ==
+    /// row position and causal attention needs no extra masking; padded
+    /// query slots are skipped outright (their k/v stay masked for the
+    /// whole session).
+    fn prefill_batched(
+        &self,
+        prompts: &[Vec<i32>],
+        plens: &[usize],
+        cache: &mut KvCache,
+    ) -> Vec<i32> {
+        let cfg = &self.cfg;
+        let b = prompts.len();
+        let d = cfg.d_model;
+        let dkv = cfg.d_kv();
+        let f = cfg.d_ff;
+        let tmax = plens.iter().copied().max().unwrap_or(0);
+        cache.reserve(tmax);
+        let rows = b * tmax;
+
+        let nh = cfg.n_heads;
+        let nkv = cfg.n_kv_heads;
+        let hd = cfg.head_dim();
+        let rep = nh / nkv;
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        // embed (padded slots reuse token 0; every later read of them is
+        // masked)
+        let mut x = vec![0.0f32; rows * d];
+        for (r, p) in prompts.iter().enumerate() {
+            for pos in 0..tmax {
+                let tok = if pos < plens[r] { p[pos] as usize } else { 0 };
+                x[(r * tmax + pos) * d..(r * tmax + pos + 1) * d]
+                    .copy_from_slice(&self.emb.data[tok * d..(tok + 1) * d]);
+            }
+        }
+        let mut h = vec![0.0f32; rows * d];
+        let mut q = vec![0.0f32; rows * d];
+        let mut kb = vec![0.0f32; rows * dkv];
+        let mut vb = vec![0.0f32; rows * dkv];
+        let mut ctx = vec![0.0f32; rows * d];
+        let mut proj = vec![0.0f32; rows * d];
+        let mut gate = vec![0.0f32; rows * f];
+        let mut up = vec![0.0f32; rows * f];
+        let mut mlp = vec![0.0f32; rows * f];
+
+        for (l, blk) in self.blocks.iter().enumerate() {
+            h.copy_from_slice(&x);
+            rmsnorm_rows(&mut h, d, &blk.norm1.data, cfg.norm_eps);
+            blk.linears["q_proj"].forward_into(&h, rows, &mut q);
+            blk.linears["k_proj"].forward_into(&h, rows, &mut kb);
+            blk.linears["v_proj"].forward_into(&h, rows, &mut vb);
+            // RoPE at the row-local position (== slot index during
+            // prefill, since real tokens are left-aligned)
+            for r in 0..b {
+                for pos in 0..tmax {
+                    for hi in 0..nh {
+                        let o = (r * tmax + pos) * d + hi * hd;
+                        rope_row(&mut q[o..o + hd], pos, cfg.rope_theta);
+                    }
+                    for hi in 0..nkv {
+                        let o = (r * tmax + pos) * dkv + hi * hd;
+                        rope_row(&mut kb[o..o + hd], pos, cfg.rope_theta);
+                    }
+                }
+            }
+            // cache layout is [t][b][d_kv]; the forward buffers are
+            // [b][t][d_kv] — transposed copy
+            for pos in 0..tmax {
+                for r in 0..b {
+                    let dst = (pos * b + r) * dkv;
+                    let src = (r * tmax + pos) * dkv;
+                    cache.k[l][dst..dst + dkv].copy_from_slice(&kb[src..src + dkv]);
+                    cache.v[l][dst..dst + dkv].copy_from_slice(&vb[src..src + dkv]);
+                }
+            }
+            // causal attention, parallel over (row, head) pairs; padded
+            // query slots are skipped
+            let ctx_ptr = ctx.as_ptr() as usize;
+            let qd: &[f32] = &q;
+            let kd: &[f32] = &kb;
+            let vd: &[f32] = &vb;
+            parallel_chunks(b * nh, |_, s0, e0| {
+                let mut scores = vec![0.0f32; tmax];
+                for bh in s0..e0 {
+                    let r = bh / nh;
+                    let hi = bh % nh;
+                    let kvh = hi / rep;
+                    for qt in 0..plens[r] {
+                        let qrow = &qd[(r * tmax + qt) * d + hi * hd..][..hd];
+                        let mut maxv = f32::NEG_INFINITY;
+                        for (kt, s) in scores[..=qt].iter_mut().enumerate() {
+                            let base = (r * tmax + kt) * dkv + kvh * hd;
+                            let dot: f32 = qrow
+                                .iter()
+                                .zip(&kd[base..base + hd])
+                                .map(|(a, c)| a * c)
+                                .sum::<f32>()
+                                * scale;
+                            *s = dot;
+                            maxv = maxv.max(dot);
+                        }
+                        let mut denom = 0.0f32;
+                        for s in scores[..=qt].iter_mut() {
+                            *s = (*s - maxv).exp();
+                            denom += *s;
+                        }
+                        let out = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                (ctx_ptr as *mut f32).add((r * tmax + qt) * d + hi * hd),
+                                hd,
+                            )
+                        };
+                        out.fill(0.0);
+                        for (kt, s) in scores[..=qt].iter().enumerate() {
+                            let w = s / denom;
+                            if w == 0.0 {
+                                continue;
+                            }
+                            let base = (r * tmax + kt) * dkv + kvh * hd;
+                            for (o, &vv) in out.iter_mut().zip(&vd[base..base + hd]) {
+                                *o += w * vv;
+                            }
+                        }
+                    }
+                }
+            });
+            blk.linears["o_proj"].forward_into(&ctx, rows, &mut proj);
+            for (a, o) in x.iter_mut().zip(&proj) {
+                *a += o;
+            }
+
+            h.copy_from_slice(&x);
+            rmsnorm_rows(&mut h, d, &blk.norm2.data, cfg.norm_eps);
+            blk.linears["gate_proj"].forward_into(&h, rows, &mut gate);
+            blk.linears["up_proj"].forward_into(&h, rows, &mut up);
+            for i in 0..rows * f {
+                mlp[i] = silu(gate[i]) * up[i];
+            }
+            blk.linears["down_proj"].forward_into(&mlp, rows, &mut proj);
+            for (a, o) in x.iter_mut().zip(&proj) {
+                *a += o;
+            }
+        }
+
+        cache.len = tmax;
+        for pos in 0..tmax {
+            for r in 0..b {
+                cache.valid[pos * b + r] = pos < plens[r];
+            }
+        }
+        for r in 0..b {
+            cache.row_pos[r] = plens[r];
+        }
+
+        // head logits at each row's final prompt slot only
+        let mut hl = vec![0.0f32; b * d];
+        for r in 0..b {
+            let src = (r * tmax + plens[r] - 1) * d;
+            hl[r * d..(r + 1) * d].copy_from_slice(&x[src..src + d]);
+        }
+        rmsnorm_rows(&mut hl, d, &self.norm_f.data, cfg.norm_eps);
+        let v = cfg.vocab_size;
+        let mut logits = vec![0.0f32; b * v];
+        linalg::matmul_bt_into(&hl, b, d, &self.emb.data, v, &mut logits);
+        (0..b).map(|r| argmax_row(&logits[r * v..(r + 1) * v])).collect()
+    }
+
+    /// Batched greedy generation (batched prefill); returns outputs +
+    /// throughput stats. Ragged prompt lengths are fully supported: each
+    /// row's output is exactly what that prompt yields when served solo.
     pub fn generate(
         &self,
         prompts: &[Vec<i32>],
         max_new: usize,
+    ) -> Result<(Vec<Vec<i32>>, DecodeStats)> {
+        self.generate_with(prompts, max_new, PrefillMode::Batched)
+    }
+
+    /// `generate` with an explicit prefill strategy (the per-token path is
+    /// kept as the benchmark baseline for the batched one).
+    pub fn generate_with(
+        &self,
+        prompts: &[Vec<i32>],
+        max_new: usize,
+        mode: PrefillMode,
     ) -> Result<(Vec<Vec<i32>>, DecodeStats)> {
         let b = prompts.len();
         if b == 0 {
@@ -272,22 +733,27 @@ impl ServeModel {
                 );
             }
         }
-        let plen = prompts.iter().map(|p| p.len()).max().unwrap_or(0);
-        let mut cache = KvCache::new(&self.cfg, b);
-        // prefill token-by-token (decode-path benchmark, like TP_n in the
-        // paper measures generated tokens/s)
-        let mut last: Vec<i32> = vec![0; b];
-        for pos in 0..plen {
-            let toks: Vec<i32> =
-                prompts.iter().map(|p| p[pos.min(p.len() - 1)]).collect();
-            last = self.decode_step(&toks, &mut cache);
-        }
+        let plens: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
+        let tmax = plens.iter().copied().max().unwrap_or(0);
+        let mut cache = KvCache::with_capacity(&self.cfg, b, tmax + max_new);
+        let mut scratch = DecodeScratch::new(&self.cfg, b);
         let _sp = crate::span!("serve.generate", &self.label);
+
         let t0 = std::time::Instant::now();
+        let mut last = match mode {
+            PrefillMode::Batched => self.prefill_batched(prompts, &plens, &mut cache),
+            PrefillMode::PerToken => {
+                self.prefill_per_token(prompts, &plens, &mut cache, &mut scratch)
+            }
+        };
+        let prefill_s = t0.elapsed().as_secs_f64();
+
+        let t1 = std::time::Instant::now();
+        let all_valid = vec![true; b];
         let mut outs: Vec<Vec<i32>> = vec![Vec::with_capacity(max_new); b];
         for _ in 0..max_new {
             let ts = std::time::Instant::now();
-            last = self.decode_step(&last, &mut cache);
+            last = self.decode_step(&last, &all_valid, &mut cache, &mut scratch);
             // per-request latency histogram for the packed qmatmul path
             crate::obs::hist_record(
                 "serve.decode_step_us",
@@ -297,24 +763,39 @@ impl ServeModel {
                 outs[r].push(tok);
             }
         }
-        let dt = t0.elapsed().as_secs_f64();
+        let decode_s = t1.elapsed().as_secs_f64();
+        let prompt_tokens: usize = plens.iter().sum();
         let stats = DecodeStats {
             label: self.label.clone(),
             batch: b,
-            prompt_len: plen,
+            prompt_len: tmax,
+            prompt_lens: plens,
             new_tokens: max_new,
-            tokens_per_s: (b * max_new) as f64 / dt,
+            prefill_s,
+            decode_s,
+            tokens_per_s: (b * max_new) as f64 / decode_s,
+            prefill_tokens_per_s: prompt_tokens as f64 / prefill_s,
             weight_bytes: self.weight_bytes(),
         };
         if crate::obs::enabled() {
+            let plens_s = stats
+                .prompt_lens
+                .iter()
+                .map(|l| l.to_string())
+                .collect::<Vec<_>>()
+                .join(",");
             crate::obs::event(
                 "serve_request",
                 &[
                     ("label", stats.label.as_str().into()),
                     ("batch", stats.batch.into()),
                     ("prompt_len", stats.prompt_len.into()),
+                    ("prompt_lens", plens_s.into()),
                     ("new_tokens", stats.new_tokens.into()),
+                    ("prefill_s", stats.prefill_s.into()),
+                    ("decode_s", stats.decode_s.into()),
                     ("tokens_per_s", stats.tokens_per_s.into()),
+                    ("prefill_tokens_per_s", stats.prefill_tokens_per_s.into()),
                     ("weight_bytes", stats.weight_bytes.into()),
                 ],
             );
@@ -354,6 +835,8 @@ mod tests {
         assert_eq!(o1, o2);
         assert_eq!(o1[0].len(), 8);
         assert!(s1.tokens_per_s > 0.0);
+        assert!(s1.prefill_s > 0.0);
+        assert_eq!(s1.prompt_lens, vec![3, 3]);
         assert!(o1.iter().flatten().all(|&t| (t as usize) < cfg.vocab_size));
     }
 
@@ -369,9 +852,10 @@ mod tests {
 
         // incremental
         let mut cache = KvCache::new(&cfg, 1);
+        let mut scratch = DecodeScratch::new(&cfg, 1);
         let mut next = 0;
         for pos in 0..prompt.len() {
-            next = m.decode_step(&prompt[pos..pos + 1].to_vec(), &mut cache)[0];
+            next = m.decode_step(&prompt[pos..pos + 1], &[true], &mut cache, &mut scratch)[0];
         }
 
         // full forward on host
@@ -395,5 +879,83 @@ mod tests {
             .unwrap()
             .0 as i32;
         assert_eq!(next, want, "incremental decode diverged from prefill");
+    }
+
+    #[test]
+    fn batched_prefill_matches_per_token() {
+        // The fast multi-token prefill must produce the exact same
+        // generation as the token-by-token baseline, ragged or not.
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let mut rng = Pcg32::seeded(3);
+        let p = Params::init(&cfg, &mut rng);
+        let m = ServeModel::dense(&p);
+        for prompts in [
+            vec![vec![1i32, 2, 3, 4], vec![5, 6, 7, 8]],
+            vec![vec![9i32, 8, 7, 6, 5, 4], vec![1, 2], vec![3, 3, 3]],
+        ] {
+            let (ob, sb) = m.generate_with(&prompts, 6, PrefillMode::Batched).unwrap();
+            let (ot, _) = m.generate_with(&prompts, 6, PrefillMode::PerToken).unwrap();
+            assert_eq!(ob, ot, "prefill modes diverged for {prompts:?}");
+            assert_eq!(sb.prompt_lens, prompts.iter().map(|p| p.len()).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn ragged_batch_matches_solo() {
+        // THE regression for the KV-cache pollution bug: a short prompt
+        // batched with a longer one must generate exactly the tokens it
+        // generates alone. The old code re-fed the short prompt's last
+        // token during padded prefill steps, so its output depended on its
+        // batchmates.
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let mut rng = Pcg32::seeded(4);
+        let p = Params::init(&cfg, &mut rng);
+        let m = ServeModel::dense(&p);
+        let long = vec![3i32, 17, 40, 9, 22, 5, 61, 30];
+        let short = vec![12i32, 7, 44];
+        let (solo_long, _) = m.generate(std::slice::from_ref(&long), 8).unwrap();
+        let (solo_short, _) = m.generate(std::slice::from_ref(&short), 8).unwrap();
+        for mode in [PrefillMode::Batched, PrefillMode::PerToken] {
+            let (batched, stats) =
+                m.generate_with(&[long.clone(), short.clone()], 8, mode).unwrap();
+            assert_eq!(batched[0], solo_long[0], "{mode:?}: long row polluted");
+            assert_eq!(batched[1], solo_short[0], "{mode:?}: short row polluted");
+            assert_eq!(stats.prompt_lens, vec![8, 3]);
+        }
+    }
+
+    #[test]
+    fn kv_cache_grows_past_capacity() {
+        // with_capacity is a fast path, not a hard limit: generating past
+        // the preallocated slots must transparently grow the cache.
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let mut rng = Pcg32::seeded(5);
+        let p = Params::init(&cfg, &mut rng);
+        let m = ServeModel::dense(&p);
+        let prompt = vec![vec![1i32, 2, 3]];
+        let mut cache = KvCache::with_capacity(&cfg, 1, 2);
+        let mut scratch = DecodeScratch::new(&cfg, 1);
+        let mut tok = 1i32;
+        for pos in 0..6 {
+            let t = if pos < 3 { prompt[0][pos] } else { tok };
+            tok = m.decode_step(&[t], &[true], &mut cache, &mut scratch)[0];
+        }
+        assert_eq!(cache.len, 6);
+        assert!(cache.capacity() >= 6);
+        assert_eq!(cache.row_pos(0), 6);
+        // and the grown-cache decode matches a roomy cache from scratch
+        let (full, _) = m.generate(&prompt, 3).unwrap();
+        let mut cache2 = KvCache::with_capacity(&cfg, 1, 64);
+        let mut scratch2 = DecodeScratch::new(&cfg, 1);
+        let mut tok2 = 0i32;
+        for pos in 0..3 {
+            tok2 = m.decode_step(&[prompt[0][pos]], &[true], &mut cache2, &mut scratch2)[0];
+        }
+        let mut got = vec![tok2];
+        for _ in 0..2 {
+            tok2 = m.decode_step(&[tok2], &[true], &mut cache2, &mut scratch2)[0];
+            got.push(tok2);
+        }
+        assert_eq!(got, full[0]);
     }
 }

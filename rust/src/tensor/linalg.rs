@@ -6,24 +6,73 @@
 use super::Tensor;
 use crate::util::{parallel_chunks, parallel_rows};
 
+/// Dot product with four independent accumulators. Every matmul in the
+/// serving hot path funnels through this one function so dense prefill,
+/// incremental decode and the packed kernel accumulate in the identical
+/// order — batched generation stays bit-identical to solo generation.
+#[inline]
+pub fn dot_unrolled(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let head = n - n % 4;
+    let mut acc = [0.0f32; 4];
+    let mut t = 0;
+    while t < head {
+        acc[0] += a[t] * b[t];
+        acc[1] += a[t + 1] * b[t + 1];
+        acc[2] += a[t + 2] * b[t + 2];
+        acc[3] += a[t + 3] * b[t + 3];
+        t += 4;
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for t in head..n {
+        s += a[t] * b[t];
+    }
+    s
+}
+
 /// y = x @ w^T; x: [m, k], w: [n, k] -> [m, n]. Row-parallel.
 pub fn matmul_bt(x: &Tensor, w: &Tensor) -> Tensor {
     let (m, k) = x.dims2();
     let (n, k2) = w.dims2();
     assert_eq!(k, k2, "inner dims {k} vs {k2}");
     let mut out = vec![0.0f32; m * n];
-    parallel_rows(&mut out, n, |i, row| {
-        let xi = &x.data[i * k..(i + 1) * k];
-        for (j, o) in row.iter_mut().enumerate() {
-            let wj = &w.data[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for t in 0..k {
-                acc += xi[t] * wj[t];
+    matmul_bt_into(&x.data, m, k, &w.data, n, &mut out);
+    Tensor::new(vec![m, n], out)
+}
+
+/// `matmul_bt` into a caller-provided buffer (`out.len() == m * n`). The
+/// serving decode loop calls this every step, so no allocation happens
+/// here. For the decode shape (m small, n large — e.g. the [b, d] x
+/// [vocab, d] logits head at batch 1) the work is parallelized over the
+/// `w` rows instead of the `x` rows, which would otherwise leave all but
+/// `m` workers idle.
+pub fn matmul_bt_into(x: &[f32], m: usize, k: usize, w: &[f32], n: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), m * k, "x len vs [{m}, {k}]");
+    assert_eq!(w.len(), n * k, "w len vs [{n}, {k}]");
+    assert_eq!(out.len(), m * n, "out len vs [{m}, {n}]");
+    if m >= crate::util::n_threads() || m >= n {
+        parallel_rows(out, n, |i, row| {
+            let xi = &x[i * k..(i + 1) * k];
+            for (j, o) in row.iter_mut().enumerate() {
+                *o = dot_unrolled(xi, &w[j * k..(j + 1) * k]);
             }
-            *o = acc;
+        });
+        return;
+    }
+    // Column-parallel: each worker owns a contiguous j-range of weight
+    // rows and fills out[i*n + j] for all i. Writes are disjoint per j, so
+    // the raw-pointer fan-out (same idiom as hostfwd attention) is sound.
+    let out_ptr = out.as_ptr() as usize;
+    let total = out.len();
+    parallel_chunks(n, |_, s0, e0| {
+        let o = unsafe { std::slice::from_raw_parts_mut(out_ptr as *mut f32, total) };
+        for j in s0..e0 {
+            let wj = &w[j * k..(j + 1) * k];
+            for i in 0..m {
+                o[i * n + j] = dot_unrolled(&x[i * k..(i + 1) * k], wj);
+            }
         }
     });
-    Tensor::new(vec![m, n], out)
 }
 
 /// a @ b; a: [m, k], b: [k, n].

@@ -43,10 +43,17 @@ impl Bench {
             .ok()
             .and_then(|s| s.parse().ok())
             .unwrap_or(700u64);
+        Self::with_min_time(name, Duration::from_millis(ms))
+    }
+
+    /// Explicit measurement budget, bypassing `TESSERAQ_BENCH_MS` — for
+    /// tests and callers that must not depend on (or mutate) process-wide
+    /// environment state.
+    pub fn with_min_time(name: &str, min_time: Duration) -> Self {
         Bench {
             name: name.to_string(),
-            min_time: Duration::from_millis(ms),
-            warmup: Duration::from_millis(ms / 4),
+            min_time,
+            warmup: min_time / 4,
             results: Vec::new(),
         }
     }
@@ -85,7 +92,10 @@ impl Bench {
                 iters: samples.len() as u64,
                 mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
                 p50_ns: samples[samples.len() / 2],
-                p95_ns: samples[(samples.len() as f64 * 0.95) as usize % samples.len()],
+                // clamp, don't wrap: `(len * 0.95) as usize` == len for
+                // small sample counts, and `% len` would alias that to
+                // index 0 — reporting the MINIMUM as the p95
+                p95_ns: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
             }
         };
         // stderr, not stdout: bench binaries may have their stdout piped
@@ -158,12 +168,25 @@ mod tests {
 
     #[test]
     fn bench_measures_something() {
-        std::env::set_var("TESSERAQ_BENCH_MS", "20");
-        let mut b = Bench::new("self");
+        // with_min_time, not set_var: tests run concurrently and mutating
+        // TESSERAQ_BENCH_MS would race any other test constructing a Bench
+        let mut b = Bench::with_min_time("self", Duration::from_millis(20));
         let rec = b.iter("spin", || {
             std::hint::black_box((0..1000).sum::<u64>());
         });
         assert!(rec.mean_ns > 0.0);
         assert!(rec.iters >= 5);
+    }
+
+    #[test]
+    fn p95_clamps_to_last_sample() {
+        // 5 samples: (5 * 0.95) as usize == 4 == len - 1; anything that
+        // wraps (the old `% len`) would report samples[0] (the minimum)
+        let mut b = Bench::with_min_time("self", Duration::from_millis(1));
+        let rec = b.iter("tiny", || {
+            std::hint::black_box(std::hint::black_box(3u64).pow(2));
+        });
+        assert!(rec.iters >= 5);
+        assert!(rec.p95_ns >= rec.p50_ns, "p95 {} < p50 {}", rec.p95_ns, rec.p50_ns);
     }
 }

@@ -15,14 +15,27 @@ pub fn n_threads() -> usize {
         })
 }
 
+/// Number of workers `parallel_chunks(n, ..)` will actually spawn for `n`
+/// items (1 means the serial fallback). Callers that hand each worker a
+/// disjoint slice of a preallocated arena (the serving decode scratch)
+/// size the arena with this.
+pub fn planned_workers(n: usize) -> usize {
+    let workers = n_threads().min(n.max(1));
+    if workers <= 1 || n < 64 {
+        1
+    } else {
+        workers
+    }
+}
+
 /// Run `f(chunk_index, start, end)` over `n` items split into contiguous
 /// chunks across the thread pool. `f` must be Sync; chunks don't overlap.
 pub fn parallel_chunks<F>(n: usize, f: F)
 where
     F: Fn(usize, usize, usize) + Sync,
 {
-    let workers = n_threads().min(n.max(1));
-    if workers <= 1 || n < 64 {
+    let workers = planned_workers(n);
+    if workers <= 1 {
         f(0, 0, n);
         return;
     }

@@ -98,6 +98,26 @@ fn e2e_zeroshot_ranking_runs_on_quantized_model() {
 }
 
 #[test]
+fn e2e_zeroshot_handles_empty_prefix() {
+    let Some(ctx) = ctx() else { return };
+    let size = "nano";
+    let base = ctx.base_model(size, CorpusKind::WikiLike).expect("base");
+    let ev = Evaluator::new(&ctx.eng, size).expect("eval");
+    // zero-length task prefixes used to underflow `start - 1` when
+    // scoring candidates and panic the whole suite
+    let items = (0..4i32)
+        .map(|i| tesseraq::data::TaskItem {
+            prefix: vec![],
+            cand: [vec![1 + i, 2, 3], vec![4, 5 + i, 6]],
+            label: (i % 2) as usize,
+        })
+        .collect();
+    let task = Task { kind: TaskKind::PiqaS, items };
+    let acc = ev.zeroshot(&base, None, 65535.0, &task).unwrap();
+    assert!((0.0..=1.0).contains(&acc), "accuracy out of range: {acc}");
+}
+
+#[test]
 fn e2e_rotation_path_evaluates() {
     let Some(ctx) = ctx() else { return };
     let size = "nano";

@@ -1,0 +1,113 @@
+//! Ragged-batch serving regressions. The old serve path padded short
+//! prompts by re-feeding their last token during prefill, so a row's KV
+//! cache (and therefore its output) depended on its batchmates. These
+//! tests pin the contract: every row of a ragged batch generates exactly
+//! the tokens it generates when served solo, for dense and packed models,
+//! under both prefill strategies. No compiled artifacts needed.
+
+use tesseraq::model::{ModelConfig, Params};
+use tesseraq::serve::{PrefillMode, ServeModel};
+use tesseraq::tensor::Pcg32;
+
+fn nano_model(seed: u64) -> (ModelConfig, Params) {
+    let cfg = ModelConfig::preset("nano").unwrap();
+    let mut rng = Pcg32::seeded(seed);
+    let p = Params::init(&cfg, &mut rng);
+    (cfg, p)
+}
+
+fn solo_rows(m: &ServeModel, prompts: &[Vec<i32>], new: usize) -> Vec<Vec<i32>> {
+    prompts
+        .iter()
+        .map(|p| {
+            let (mut outs, _) = m.generate(std::slice::from_ref(p), new).unwrap();
+            outs.remove(0)
+        })
+        .collect()
+}
+
+#[test]
+fn ragged_batch_is_independent_of_batchmates_dense() {
+    let (_, p) = nano_model(11);
+    let m = ServeModel::dense(&p);
+    let prompts = vec![
+        vec![3i32, 17, 40, 9, 22, 5, 61, 30],
+        vec![12i32, 7, 44],
+        vec![1i32, 2, 3, 4, 5],
+    ];
+    let solo = solo_rows(&m, &prompts, 10);
+    for mode in [PrefillMode::Batched, PrefillMode::PerToken] {
+        let (batched, stats) = m.generate_with(&prompts, 10, mode).unwrap();
+        assert_eq!(batched, solo, "{mode:?}: batchmates leaked into a row");
+        assert_eq!(stats.prompt_lens, vec![8, 3, 5]);
+        assert_eq!(stats.prompt_len, 8);
+    }
+}
+
+#[test]
+fn ragged_batch_is_independent_of_batchmates_packed() {
+    let (_, p) = nano_model(12);
+    for bits in [2u32, 3] {
+        let m = ServeModel::packed_rtn(&p, bits).unwrap();
+        let prompts = vec![vec![9i32, 8, 7, 6, 5, 4, 3], vec![42i32, 100]];
+        let solo = solo_rows(&m, &prompts, 8);
+        let (batched, _) = m.generate(&prompts, 8).unwrap();
+        assert_eq!(batched, solo, "W{bits}: batchmates leaked into a row");
+    }
+}
+
+#[test]
+fn batched_prefill_matches_per_token_packed() {
+    // W4 exercises the packed forward across both multi-row (batched
+    // prefill) and single-slab (decode) shapes; the two prefill
+    // strategies must agree exactly.
+    let (_, p) = nano_model(13);
+    let m = ServeModel::packed_rtn(&p, 4).unwrap();
+    let prompts = vec![vec![5i32, 6, 7, 8, 9, 10], vec![99i32, 1, 2], vec![64i32; 4]];
+    let (ob, _) = m.generate_with(&prompts, 6, PrefillMode::Batched).unwrap();
+    let (ot, _) = m.generate_with(&prompts, 6, PrefillMode::PerToken).unwrap();
+    assert_eq!(ob, ot);
+}
+
+#[test]
+fn decode_stats_report_prefill_and_per_row_lengths() {
+    let (cfg, p) = nano_model(14);
+    let m = ServeModel::dense(&p);
+    let prompts = vec![vec![1i32, 2, 3, 4], vec![5i32, 6]];
+    let (outs, stats) = m.generate(&prompts, 5).unwrap();
+    assert_eq!(stats.batch, 2);
+    assert_eq!(stats.new_tokens, 5);
+    assert_eq!(stats.prompt_lens, vec![4, 2]);
+    assert_eq!(stats.prompt_len, 4);
+    assert!(stats.prefill_s > 0.0, "prefill time not recorded");
+    assert!(stats.decode_s > 0.0, "decode time not recorded");
+    assert!(stats.tokens_per_s > 0.0);
+    assert!(stats.prefill_tokens_per_s > 0.0);
+    assert!(stats.weight_bytes > 0);
+    for o in &outs {
+        assert_eq!(o.len(), 5);
+        assert!(o.iter().all(|&t| t >= 0 && (t as usize) < cfg.vocab_size));
+    }
+}
+
+#[test]
+fn ragged_equivalence_proptest() {
+    // random ragged batches: every row must equal its solo run exactly
+    let (cfg, p) = nano_model(15);
+    let m = ServeModel::dense(&p);
+    tesseraq::util::proptest(6, 0x5EED5, |rng| {
+        let b = 1 + rng.below(3);
+        let prompts: Vec<Vec<i32>> = (0..b)
+            .map(|_| {
+                let len = 1 + rng.below(9);
+                (0..len).map(|_| rng.below(cfg.vocab_size) as i32).collect()
+            })
+            .collect();
+        let new = 1 + rng.below(5);
+        let (batched, _) = m.generate(&prompts, new).unwrap();
+        for (r, prompt) in prompts.iter().enumerate() {
+            let (solo, _) = m.generate(std::slice::from_ref(prompt), new).unwrap();
+            assert_eq!(batched[r], solo[0], "row {r} of {prompts:?} (new={new})");
+        }
+    });
+}
