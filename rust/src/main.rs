@@ -6,6 +6,7 @@
 //!   repro eval      --size tiny [--ckpt PATH] [--quant ...]
 //!   repro serve     --size tiny --bits 4 [--batch 16] [--new 64]
 //!   repro serve-bench [--size nano] [--bits 16,2,3,4]   artifact-free serving bench
+//!   repro serve-load  [--size nano] [--rate 200] [--requests 64]  gateway load test
 //!   repro table N   [--fast]       regenerate paper table N
 //!   repro figure N  [--fast]       regenerate paper figure N
 //!   repro e2e       [--fast]       full train->quantize->eval->serve run
@@ -147,6 +148,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "eval" => cmd_eval(args),
         "serve" => cmd_serve(args),
         "serve-bench" => cmd_serve_bench(args),
+        "serve-load" => cmd_serve_load(args),
         "table" => {
             let id: u32 = args.positional.get(1).context("table N")?.parse()?;
             let mut ctx = Ctx::new(args.fast())?;
@@ -196,6 +198,13 @@ const HELP: &str = "repro — TesseraQ reproduction launcher
             host-side RTN packing; ragged prompts exercise the padded
             decode path; writes results/BENCH_serve.json
             (TESSERAQ_BENCH_MS sets the per-case measurement budget)
+  serve-load [--size nano] [--bits 16] [--requests 64] [--rate 200]
+            [--deadline 2000] [--queue 32] [--batch 4] [--kv-budget 4096]
+            [--prompt 8] [--new 8] [--seed N]
+            open-loop load test against the serving gateway (seeded
+            Poisson arrivals); reports p50/p95/p99 latency, shed and
+            deadline-miss rates, goodput; writes results/BENCH_gateway.json
+            (--deadline 0 disables deadlines; faults via TESSERAQ_FAULTS)
   table N   [--fast]        regenerate paper table N (1-12)
   figure N  [--fast]        regenerate paper figure N (2-4)
   all-tables [--fast]
@@ -315,7 +324,11 @@ fn cmd_calibrate_smoke(args: &Args) -> Result<()> {
     );
     match tesseraq::report::write_json("calib_smoke", &report.to_json()) {
         Ok(p) => println!("report: {}", p.display()),
-        Err(e) => eprintln!("[report] could not write calib_smoke.json: {e:#}"),
+        Err(e) => tesseraq::obs::warn(
+            "report_write_failed",
+            &format!("[report] could not write calib_smoke.json: {e:#}"),
+            &[("report", "calib_smoke".into()), ("error", format!("{e:#}").into())],
+        ),
     }
     Ok(())
 }
@@ -467,6 +480,176 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     top.insert("threads".to_string(), Json::Num(tesseraq::util::n_threads() as f64));
     top.insert("cases".to_string(), Json::Arr(cases));
     let path = tesseraq::report::write_json("BENCH_serve", &Json::Obj(top).dump())?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Open-loop load test against the serving gateway: synthetic Poisson
+/// arrivals from a seeded RNG are submitted at their scheduled times
+/// (arrivals do not wait for the server — that is what makes overload
+/// visible), the gateway pumps between arrivals, and the terminal
+/// outcomes become results/BENCH_gateway.json: p50/p95/p99 completion
+/// latency, shed rate, deadline-miss rate, and goodput (completed tokens
+/// per wall second). Artifact-free (dense or host-side RTN packing) so
+/// CI can run it; `TESSERAQ_FAULTS` request-level kinds turn it into a
+/// chaos drill.
+fn cmd_serve_load(args: &Args) -> Result<()> {
+    use std::collections::BTreeMap;
+    use tesseraq::serve::{Gateway, GatewayConfig, Request};
+    use tesseraq::util::json::Json;
+
+    let size = args.flag("size").unwrap_or("nano").to_string();
+    let cfg = ModelConfig::preset(&size)?;
+    let bits: u32 = args.flag("bits").unwrap_or("16").parse()?;
+    let n_requests: usize = args.flag("requests").unwrap_or("64").parse()?;
+    let rate: f64 = args.flag("rate").unwrap_or("200").parse()?;
+    let deadline_ms: u64 = args.flag("deadline").unwrap_or("2000").parse()?;
+    let queue_depth: usize = args.flag("queue").unwrap_or("32").parse()?;
+    let batch: usize = args.flag("batch").unwrap_or("4").parse()?;
+    let kv_budget: usize = args.flag("kv-budget").unwrap_or("4096").parse()?;
+    let prompt_len: usize = args.flag("prompt").unwrap_or("8").parse()?;
+    let max_new: usize = args.flag("new").unwrap_or("8").parse()?;
+    let seed: u64 = args.flag("seed").unwrap_or("42").parse()?;
+    if n_requests == 0 || rate <= 0.0 || batch == 0 || prompt_len == 0 || max_new == 0 {
+        bail!("serve-load needs requests/rate/batch/prompt/new all >= 1");
+    }
+
+    let mut rng = Pcg32::seeded(seed);
+    let params = Params::init(&cfg, &mut rng);
+    let model = if bits >= 16 {
+        ServeModel::dense(&params)
+    } else {
+        ServeModel::packed_rtn(&params, bits)?
+    };
+
+    // open-loop arrival schedule: exponential interarrivals at `rate`
+    // req/s, ragged prompt lengths in [prompt/2, prompt]
+    let mut arrivals: Vec<(u64, Vec<i32>)> = Vec::with_capacity(n_requests);
+    let mut t_ms = 0.0f64;
+    for _ in 0..n_requests {
+        let u = rng.uniform();
+        t_ms += -(1.0 - u).ln() * 1000.0 / rate;
+        let len = (prompt_len / 2).max(1) + rng.below(prompt_len / 2 + 1);
+        let prompt: Vec<i32> =
+            (0..len).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+        arrivals.push((t_ms as u64, prompt));
+    }
+
+    let gw_cfg = GatewayConfig {
+        queue_depth,
+        max_batch: batch,
+        kv_slot_budget: kv_budget,
+        default_deadline_ms: if deadline_ms == 0 { None } else { Some(deadline_ms) },
+        ..Default::default()
+    };
+    let mut gw = Gateway::new(&model, gw_cfg);
+    if let Some(plan) = FaultPlan::from_env() {
+        gw = gw.with_faults(plan);
+    }
+
+    println!(
+        "serve-load: {size} {} rate={rate} req/s requests={n_requests} deadline={deadline_ms}ms \
+         queue={queue_depth} batch={batch} kv-budget={kv_budget}",
+        model.label
+    );
+    let t0 = std::time::Instant::now();
+    let mut next = 0usize;
+    loop {
+        let now = gw.now_ms();
+        while next < arrivals.len() && arrivals[next].0 <= now {
+            let (_, prompt) = &arrivals[next];
+            let _ = gw.submit(Request::new(prompt.clone(), max_new));
+            next += 1;
+        }
+        if gw.idle() {
+            if next >= arrivals.len() {
+                break;
+            }
+            // nothing in flight: skip synthetic time to the next arrival
+            let gap = arrivals[next].0.saturating_sub(now);
+            gw.advance_ms(gap.max(1));
+            continue;
+        }
+        gw.step();
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let c = gw.counters().clone();
+    if c.admitted != c.completed + c.deadline_missed + c.failed {
+        bail!(
+            "request conservation violated: admitted {} != {} + {} + {}",
+            c.admitted,
+            c.completed,
+            c.deadline_missed,
+            c.failed
+        );
+    }
+    if gw.kv_in_use() != 0 {
+        bail!("KV ledger leaked {} slot-units after drain", gw.kv_in_use());
+    }
+    let mut latencies: Vec<u64> = Vec::new();
+    let mut tokens_out = 0usize;
+    for out in gw.outcomes().values() {
+        if let tesseraq::serve::RequestOutcome::Completed { tokens, latency_ms, .. } = out {
+            latencies.push(*latency_ms);
+            tokens_out += tokens.len();
+        }
+    }
+    latencies.sort_unstable();
+    let pct = |p: f64| -> f64 {
+        if latencies.is_empty() {
+            return 0.0;
+        }
+        let idx = ((p / 100.0) * (latencies.len() - 1) as f64).round() as usize;
+        latencies[idx] as f64
+    };
+    let frac = |n: u64| if c.submitted == 0 { 0.0 } else { n as f64 / c.submitted as f64 };
+    let goodput = tokens_out as f64 / (wall_ms / 1e3).max(1e-9);
+
+    println!(
+        "done in {:.0}ms: {}/{} completed ({} shed, {} deadline-missed, {} failed, {} degraded)",
+        wall_ms, c.completed, c.submitted, c.shed, c.deadline_missed, c.failed, c.degraded
+    );
+    println!(
+        "latency p50/p95/p99 = {:.0}/{:.0}/{:.0} ms, goodput {:.1} tok/s, kv peak {}",
+        pct(50.0),
+        pct(95.0),
+        pct(99.0),
+        goodput,
+        gw.kv_peak()
+    );
+
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("gateway".to_string()));
+    top.insert("size".to_string(), Json::Str(size.clone()));
+    top.insert("label".to_string(), Json::Str(model.label.clone()));
+    top.insert("bits".to_string(), Json::Num(bits as f64));
+    top.insert("requests".to_string(), Json::Num(n_requests as f64));
+    top.insert("rate_req_s".to_string(), Json::Num(rate));
+    top.insert("deadline_ms".to_string(), Json::Num(deadline_ms as f64));
+    top.insert("queue_depth".to_string(), Json::Num(queue_depth as f64));
+    top.insert("batch".to_string(), Json::Num(batch as f64));
+    top.insert("kv_slot_budget".to_string(), Json::Num(kv_budget as f64));
+    top.insert("max_new".to_string(), Json::Num(max_new as f64));
+    top.insert("seed".to_string(), Json::Num(seed as f64));
+    top.insert("threads".to_string(), Json::Num(tesseraq::util::n_threads() as f64));
+    top.insert("submitted".to_string(), Json::Num(c.submitted as f64));
+    top.insert("admitted".to_string(), Json::Num(c.admitted as f64));
+    top.insert("shed".to_string(), Json::Num(c.shed as f64));
+    top.insert("completed".to_string(), Json::Num(c.completed as f64));
+    top.insert("deadline_missed".to_string(), Json::Num(c.deadline_missed as f64));
+    top.insert("failed".to_string(), Json::Num(c.failed as f64));
+    top.insert("degraded".to_string(), Json::Num(c.degraded as f64));
+    top.insert("requeued".to_string(), Json::Num(c.requeued as f64));
+    top.insert("shed_rate".to_string(), Json::Num(frac(c.shed)));
+    top.insert("deadline_miss_rate".to_string(), Json::Num(frac(c.deadline_missed)));
+    top.insert("latency_ms_p50".to_string(), Json::Num(pct(50.0)));
+    top.insert("latency_ms_p95".to_string(), Json::Num(pct(95.0)));
+    top.insert("latency_ms_p99".to_string(), Json::Num(pct(99.0)));
+    top.insert("goodput_tok_s".to_string(), Json::Num(goodput));
+    top.insert("wall_ms".to_string(), Json::Num(wall_ms));
+    top.insert("kv_peak".to_string(), Json::Num(gw.kv_peak() as f64));
+    let path = tesseraq::report::write_json("BENCH_gateway", &Json::Obj(top).dump())?;
     println!("wrote {}", path.display());
     Ok(())
 }

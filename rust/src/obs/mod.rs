@@ -21,8 +21,13 @@
 //! `run_end`, `span_open`, `span_close`, `block_done`, `par_iter`,
 //! `lwc_iter`, `rollback`, `retry`, `retry_recovered`, `fallback`,
 //! `degraded`, `resume`, `resume_stop`, `checkpoint_write`,
-//! `checkpoint_load`, `fault_injected`, `serve_request`, `bench`,
-//! `metric`, `warn`.
+//! `checkpoint_load`, `fault_injected`, `fault_spec_invalid`,
+//! `serve_request`, `bench`, `metric`, `warn`, and from the serving
+//! gateway: `gateway_admit`, `gateway_shed`, `gateway_complete`,
+//! `gateway_deadline_miss`, `gateway_degrade`, `gateway_session_abort`,
+//! `gateway_request_failed` (histograms `gateway.queue_depth`,
+//! `gateway.time_in_queue_ms`, `gateway.request_latency_ms`,
+//! `gateway.decode_step_us`).
 
 pub mod metrics;
 pub mod sink;

@@ -10,13 +10,23 @@
 //!                             <substr>; <n> times (default: persistent)
 //!   exec@<substr>[:<n>]       same for artifact execution
 //!   kill@<block>              simulated crash right after block <block>'s
-//!                             checkpoint is persisted
+//!                             checkpoint is persisted; for the serving
+//!                             gateway, <block> is the global decode step
+//!                             at which the session aborts
+//!   slow@<step>.<ms>          gateway decode step <step> (1-based, global)
+//!                             takes an extra <ms> of synthetic time
+//!   poison@<req>.<step>       non-finite logits for request id <req> at its
+//!                             own 1-based step <step> (prefill included)
+//!   stall@<iter>.<ms>         gateway pump iteration <iter> stalls for
+//!                             <ms> of synthetic time before dispatch
 //! ```
 //!
 //! Entries are comma-separated, e.g.
 //! `nan@0.3,compile@block_par_step:2,kill@1`. Counters live in `Cell`s so
 //! a shared `Rc<FaultPlan>` can be consulted from both the engine and the
-//! calibration loop.
+//! calibration loop. The request-level kinds (`slow`/`poison`/`stall`)
+//! advance the gateway's *synthetic* clock rather than sleeping, so chaos
+//! drills are deterministic and immune to scheduler jitter.
 
 use std::cell::Cell;
 use std::rc::Rc;
@@ -29,6 +39,9 @@ enum Kind {
     CompileFail,
     ExecFail,
     Kill,
+    SlowStep,
+    PoisonLogits,
+    QueueStall,
 }
 
 #[derive(Debug)]
@@ -40,6 +53,8 @@ struct Site {
     step: usize,
     /// Artifact-name substring for CompileFail/ExecFail.
     name: String,
+    /// Synthetic delay for SlowStep/QueueStall.
+    ms: u64,
     /// Remaining firings; `None` = persistent (never exhausted).
     remaining: Cell<Option<u32>>,
 }
@@ -79,6 +94,33 @@ impl FaultPlan {
                         block: b.parse().with_context(|| format!("bad block in {raw:?}"))?,
                         step: s.parse().with_context(|| format!("bad step in {raw:?}"))?,
                         name: String::new(),
+                        ms: 0,
+                        remaining: Cell::new(Some(1)),
+                    }
+                }
+                "slow" | "stall" => {
+                    let (at, ms) = rest.split_once('.').with_context(|| {
+                        format!("fault entry {raw:?}: {kind_s} wants <at>.<ms>")
+                    })?;
+                    Site {
+                        kind: if kind_s == "slow" { Kind::SlowStep } else { Kind::QueueStall },
+                        block: at.parse().with_context(|| format!("bad site in {raw:?}"))?,
+                        step: 0,
+                        name: String::new(),
+                        ms: ms.parse().with_context(|| format!("bad ms in {raw:?}"))?,
+                        remaining: Cell::new(Some(1)),
+                    }
+                }
+                "poison" => {
+                    let (req, s) = rest.split_once('.').with_context(|| {
+                        format!("fault entry {raw:?}: poison wants <req>.<step>")
+                    })?;
+                    Site {
+                        kind: Kind::PoisonLogits,
+                        block: req.parse().with_context(|| format!("bad request in {raw:?}"))?,
+                        step: s.parse().with_context(|| format!("bad step in {raw:?}"))?,
+                        name: String::new(),
+                        ms: 0,
                         remaining: Cell::new(Some(1)),
                     }
                 }
@@ -100,6 +142,7 @@ impl FaultPlan {
                         block: 0,
                         step: 0,
                         name,
+                        ms: 0,
                         remaining: Cell::new(remaining),
                     }
                 }
@@ -108,9 +151,13 @@ impl FaultPlan {
                     block: rest.parse().with_context(|| format!("bad block in {raw:?}"))?,
                     step: 0,
                     name: String::new(),
+                    ms: 0,
                     remaining: Cell::new(Some(1)),
                 },
-                other => bail!("unknown fault kind {other:?} in {raw:?} (want nan|compile|exec|kill)"),
+                other => bail!(
+                    "unknown fault kind {other:?} in {raw:?} \
+                     (want nan|compile|exec|kill|slow|poison|stall)"
+                ),
             };
             sites.push(site);
         }
@@ -127,28 +174,35 @@ impl FaultPlan {
         match FaultPlan::parse(&spec) {
             Ok(p) => Some(Rc::new(p)),
             Err(e) => {
-                eprintln!("[robust] ignoring malformed TESSERAQ_FAULTS={spec:?}: {e:#}");
+                crate::obs::warn(
+                    "fault_spec_invalid",
+                    &format!("[robust] ignoring malformed TESSERAQ_FAULTS={spec:?}: {e:#}"),
+                    &[("spec", spec.as_str().into()), ("error", format!("{e:#}").into())],
+                );
                 None
             }
         }
     }
 
-    fn fire(&self, kind: Kind, block: usize, step: usize, name: &str) -> bool {
-        let fired = self.sites.iter().any(|s| {
+    fn fire_site(&self, kind: Kind, block: usize, step: usize, name: &str) -> Option<&Site> {
+        let site = self.sites.iter().find(|s| {
             s.kind == kind
                 && match kind {
-                    Kind::NanLoss => s.block == block && s.step == step,
-                    Kind::Kill => s.block == block,
+                    Kind::NanLoss | Kind::PoisonLogits => s.block == block && s.step == step,
+                    Kind::Kill | Kind::SlowStep | Kind::QueueStall => s.block == block,
                     Kind::CompileFail | Kind::ExecFail => name.contains(&s.name),
                 }
                 && s.take()
         });
-        if fired {
+        if let Some(s) = site {
             let tag = match kind {
                 Kind::NanLoss => "nan",
                 Kind::CompileFail => "compile",
                 Kind::ExecFail => "exec",
                 Kind::Kill => "kill",
+                Kind::SlowStep => "slow",
+                Kind::PoisonLogits => "poison",
+                Kind::QueueStall => "stall",
             };
             crate::obs::event(
                 "fault_injected",
@@ -157,10 +211,15 @@ impl FaultPlan {
                     ("block", block.into()),
                     ("step", step.into()),
                     ("artifact", name.into()),
+                    ("ms", s.ms.into()),
                 ],
             );
         }
-        fired
+        site
+    }
+
+    fn fire(&self, kind: Kind, block: usize, step: usize, name: &str) -> bool {
+        self.fire_site(kind, block, step, name).is_some()
     }
 
     /// Should the soften loss of (block, 1-based step) be corrupted to NaN?
@@ -183,6 +242,28 @@ impl FaultPlan {
     /// Simulated crash after `block`'s checkpoint was persisted.
     pub fn kill_after_block(&self, block: usize) -> bool {
         self.fire(Kind::Kill, block, 0, "")
+    }
+
+    /// Gateway: simulated engine crash at global decode step `step`
+    /// (same `kill@<n>` grammar, reinterpreted on the serving path).
+    pub fn kill_at_step(&self, step: usize) -> bool {
+        self.fire(Kind::Kill, step, 0, "")
+    }
+
+    /// Gateway: synthetic extra latency for global decode step `step`.
+    pub fn slow_step(&self, step: usize) -> Option<u64> {
+        self.fire_site(Kind::SlowStep, step, 0, "").map(|s| s.ms)
+    }
+
+    /// Gateway: poison request `req`'s logits at its own 1-based step.
+    pub fn poison_logits(&self, req: u64, step: usize) -> bool {
+        let Ok(req) = usize::try_from(req) else { return false };
+        self.fire(Kind::PoisonLogits, req, step, "")
+    }
+
+    /// Gateway: synthetic stall before pump iteration `iter` dispatches.
+    pub fn queue_stall(&self, iter: usize) -> Option<u64> {
+        self.fire_site(Kind::QueueStall, iter, 0, "").map(|s| s.ms)
     }
 }
 
@@ -218,11 +299,35 @@ mod tests {
     }
 
     #[test]
+    fn parses_gateway_kinds() {
+        let p = FaultPlan::parse("slow@3.4000, poison@7.2, stall@1.2500, kill@5").unwrap();
+        // slow: one-shot, returns its delay
+        assert_eq!(p.slow_step(2), None);
+        assert_eq!(p.slow_step(3), Some(4000));
+        assert_eq!(p.slow_step(3), None, "slow site must be one-shot");
+        // poison: keyed on (request id, request-local step)
+        assert!(!p.poison_logits(7, 1));
+        assert!(!p.poison_logits(6, 2));
+        assert!(p.poison_logits(7, 2));
+        assert!(!p.poison_logits(7, 2), "poison site must be one-shot");
+        // stall: keyed on pump iteration
+        assert_eq!(p.queue_stall(1), Some(2500));
+        assert_eq!(p.queue_stall(1), None);
+        // kill@ doubles as a gateway decode-step kill
+        assert!(!p.kill_at_step(4));
+        assert!(p.kill_at_step(5));
+        assert!(!p.kill_at_step(5));
+    }
+
+    #[test]
     fn rejects_garbage() {
         assert!(FaultPlan::parse("").is_err());
         assert!(FaultPlan::parse("nan@x.y").is_err());
         assert!(FaultPlan::parse("explode@0").is_err());
         assert!(FaultPlan::parse("compile@:3").is_err());
         assert!(FaultPlan::parse("nan@3").is_err());
+        assert!(FaultPlan::parse("slow@3").is_err());
+        assert!(FaultPlan::parse("poison@1.x").is_err());
+        assert!(FaultPlan::parse("stall@.5").is_err());
     }
 }

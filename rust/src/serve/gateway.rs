@@ -1,0 +1,933 @@
+//! Overload-safe serving gateway: continuous batching with deadlines,
+//! admission control, and graceful degradation in front of [`ServeModel`].
+//!
+//! The gateway turns the batch-generate API into a trafficable serving
+//! system:
+//!
+//! * **Bounded admission queue** — submissions past `queue_depth` are
+//!   shed synchronously with a typed [`ShedReason`]; a request whose
+//!   `prompt_len + max_new` can never fit the per-session KV budget is
+//!   refused up front instead of OOMing mid-flight.
+//! * **Continuous batching** — one serving session holds `max_batch`
+//!   row slots over a shared KV time axis. Rows join and leave at
+//!   decode-step boundaries: a completed/evicted row's slot is recycled
+//!   for the next queued request ([`KvCache::reset_row`] clears the
+//!   newcomer's validity column, so it can never attend a predecessor's
+//!   KV). Because every row attends only its own valid slots and runs
+//!   RoPE at its own `row_pos`, each request's output is bit-identical
+//!   to its solo run regardless of who else shares the batch — the same
+//!   masking contract that makes ragged batches exact.
+//! * **Deadlines at decode-step granularity** — before every step,
+//!   queued requests past their deadline are failed without running and
+//!   in-flight rows past theirs are evicted mid-batch; survivors are
+//!   untouched (the evicted row simply stops being fed).
+//! * **Graceful degradation** — NaN/Inf logits fail *that row* with a
+//!   typed [`ServeError::PoisonedLogits`] (never a silent token 0). On
+//!   the packed path the failed request is retried on the dense
+//!   fallback via `robust::with_retry`, and repeated packed failures
+//!   trip a circuit breaker that moves all subsequent sessions to the
+//!   dense model.
+//! * **Chaos hooks** — `TESSERAQ_FAULTS` request-level kinds
+//!   (`slow@step.ms`, `poison@req.step`, `stall@iter.ms`, `kill@step`)
+//!   drive deterministic drills: injected delays advance the gateway's
+//!   synthetic clock, so deadline behavior cannot flip on scheduler
+//!   jitter.
+//!
+//! Telemetry: `gateway_admit` / `gateway_shed` / `gateway_deadline_miss`
+//! / `gateway_degrade` / `gateway_session_abort` events plus
+//! `gateway.queue_depth`, `gateway.time_in_queue_ms`,
+//! `gateway.request_latency_ms`, and `gateway.decode_step_us`
+//! histograms through `obs::`.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::rc::Rc;
+
+use crate::robust::{with_retry, FaultPlan};
+
+use super::sched::{
+    DeadlineStage, GatewayClock, GatewayConfig, GatewayCounters, KvLedger, Request,
+    RequestOutcome, ServeError, ShedReason,
+};
+use super::sched::Breaker;
+use super::{DecodeScratch, KvCache, ServeModel};
+
+/// An admitted request waiting for (or returned to) the queue.
+struct Admitted {
+    id: u64,
+    prompt: Vec<i32>,
+    max_new: usize,
+    /// Resolved deadline (request's own or the gateway default).
+    deadline_ms: Option<u64>,
+    submit_ms: u64,
+    /// Already survived one session abort; a second abort fails it.
+    requeued: bool,
+}
+
+/// One in-flight row of the active session.
+struct RowState {
+    id: u64,
+    prompt: Vec<i32>,
+    max_new: usize,
+    deadline_ms: Option<u64>,
+    submit_ms: u64,
+    /// Tokens fed so far — the request's own 1-based step counter is
+    /// `fed + 1` (prefill steps included); fault sites key on it.
+    fed: usize,
+    /// Prompt tokens fed so far (< prompt.len() means still prefilling).
+    pos: usize,
+    out: Vec<i32>,
+    last: i32,
+    requeued: bool,
+}
+
+impl RowState {
+    fn expired(&self, now_ms: u64) -> bool {
+        match self.deadline_ms {
+            Some(d) => now_ms.saturating_sub(self.submit_ms) > d,
+            None => false,
+        }
+    }
+}
+
+/// The active serving session: a KV time axis shared by up to
+/// `max_batch` row slots.
+struct Session {
+    cache: KvCache,
+    scratch: DecodeScratch,
+    rows: Vec<Option<RowState>>,
+    /// Running on the dense fallback (breaker tripped).
+    dense: bool,
+}
+
+impl Session {
+    fn active(&self) -> usize {
+        self.rows.iter().filter(|r| r.is_some()).count()
+    }
+}
+
+/// Request-level serving gateway over a [`ServeModel`]. Single-threaded
+/// by design — the decode step itself parallelizes over (row, head) —
+/// with an explicit `step()` pump so load generators and chaos drills
+/// control interleaving deterministically.
+pub struct Gateway<'m> {
+    primary: &'m ServeModel,
+    fallback: Option<&'m ServeModel>,
+    cfg: GatewayConfig,
+    faults: Option<Rc<FaultPlan>>,
+    clock: GatewayClock,
+    queue: VecDeque<Admitted>,
+    session: Option<Session>,
+    outcomes: BTreeMap<u64, RequestOutcome>,
+    ledger: KvLedger,
+    breaker: Breaker,
+    counters: GatewayCounters,
+    next_id: u64,
+    /// Global decode-step counter (1-based; `kill@N` / `slow@N` sites).
+    step_no: usize,
+    /// Pump-iteration counter (1-based; `stall@N` sites).
+    pump_no: usize,
+    degraded: bool,
+}
+
+impl<'m> Gateway<'m> {
+    pub fn new(primary: &'m ServeModel, cfg: GatewayConfig) -> Gateway<'m> {
+        let breaker = Breaker::new(cfg.breaker_threshold);
+        Gateway {
+            primary,
+            fallback: None,
+            cfg,
+            faults: None,
+            clock: GatewayClock::default(),
+            queue: VecDeque::new(),
+            session: None,
+            outcomes: BTreeMap::new(),
+            ledger: KvLedger::default(),
+            breaker,
+            counters: GatewayCounters::default(),
+            next_id: 0,
+            step_no: 0,
+            pump_no: 0,
+            degraded: false,
+        }
+    }
+
+    /// Dense fallback model for the degradation ladder. Must share the
+    /// primary's `ModelConfig` (same vocab/shape); typically
+    /// `ServeModel::dense` of the same parameters.
+    pub fn with_fallback(mut self, fallback: &'m ServeModel) -> Gateway<'m> {
+        debug_assert_eq!(fallback.cfg, self.primary.cfg, "fallback config mismatch");
+        self.fallback = Some(fallback);
+        self
+    }
+
+    /// Arm deterministic fault injection (chaos drills).
+    pub fn with_faults(mut self, plan: Rc<FaultPlan>) -> Gateway<'m> {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// Current gateway time (wall + synthetic fault time), ms.
+    pub fn now_ms(&self) -> u64 {
+        self.clock.now_ms()
+    }
+
+    /// Advance synthetic time (open-loop load generators skipping to
+    /// the next arrival).
+    pub fn advance_ms(&mut self, ms: u64) {
+        self.clock.advance_ms(ms);
+    }
+
+    pub fn counters(&self) -> &GatewayCounters {
+        &self.counters
+    }
+
+    /// Terminal outcomes of admitted requests, keyed by request id.
+    pub fn outcomes(&self) -> &BTreeMap<u64, RequestOutcome> {
+        &self.outcomes
+    }
+
+    pub fn take_outcomes(&mut self) -> BTreeMap<u64, RequestOutcome> {
+        std::mem::take(&mut self.outcomes)
+    }
+
+    /// KV slot-units currently reserved by in-flight requests; must be
+    /// zero after a full drain (the "no leaked slots" invariant).
+    pub fn kv_in_use(&self) -> usize {
+        self.ledger.in_use()
+    }
+
+    pub fn kv_peak(&self) -> usize {
+        self.ledger.peak()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Has the circuit breaker moved the gateway to the dense path?
+    pub fn is_degraded(&self) -> bool {
+        self.degraded
+    }
+
+    /// No queued work and no in-flight rows.
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty()
+            && self.session.as_ref().map(|s| s.active() == 0).unwrap_or(true)
+    }
+
+    /// Admission control: validate, check the KV budget, and enqueue —
+    /// or shed with a typed reason. O(prompt) and synchronous; never
+    /// blocks on in-flight work.
+    pub fn submit(&mut self, req: Request) -> Result<u64, ShedReason> {
+        self.counters.submitted += 1;
+        let id = self.next_id;
+        self.next_id += 1;
+        let shed = |reason: ShedReason, gw: &mut Self| {
+            gw.counters.shed += 1;
+            crate::obs::event(
+                "gateway_shed",
+                &[
+                    ("id", id.into()),
+                    ("reason", reason.tag().into()),
+                    ("detail", format!("{reason}").into()),
+                    ("queue_depth", gw.queue.len().into()),
+                ],
+            );
+            Err(reason)
+        };
+        if req.prompt.is_empty() {
+            return shed(ShedReason::InvalidPrompt("empty prompt".into()), self);
+        }
+        if req.max_new == 0 {
+            return shed(ShedReason::InvalidPrompt("max_new == 0".into()), self);
+        }
+        let vocab = self.primary.cfg.vocab_size;
+        if let Some(&t) = req.prompt.iter().find(|&&t| t < 0 || t as usize >= vocab) {
+            return shed(
+                ShedReason::InvalidPrompt(format!("token {t} outside vocab {vocab}")),
+                self,
+            );
+        }
+        let need = req.kv_slots();
+        if need > self.cfg.kv_slot_budget {
+            return shed(ShedReason::KvBudget { need, budget: self.cfg.kv_slot_budget }, self);
+        }
+        if self.queue.len() >= self.cfg.queue_depth {
+            return shed(ShedReason::QueueFull { depth: self.cfg.queue_depth }, self);
+        }
+        let now = self.clock.now_ms();
+        let deadline_ms = req.deadline_ms.or(self.cfg.default_deadline_ms);
+        self.queue.push_back(Admitted {
+            id,
+            prompt: req.prompt,
+            max_new: req.max_new,
+            deadline_ms,
+            submit_ms: now,
+            requeued: false,
+        });
+        self.counters.admitted += 1;
+        crate::obs::hist_record("gateway.queue_depth", self.queue.len() as f64);
+        crate::obs::event(
+            "gateway_admit",
+            &[
+                ("id", id.into()),
+                ("prompt_len", self.queue.back().map(|a| a.prompt.len()).unwrap_or(0).into()),
+                ("max_new", self.queue.back().map(|a| a.max_new).unwrap_or(0).into()),
+                ("deadline_ms", deadline_ms.unwrap_or(0).into()),
+                ("queue_depth", self.queue.len().into()),
+            ],
+        );
+        Ok(id)
+    }
+
+    /// Run the gateway until every admitted request has a terminal
+    /// outcome.
+    pub fn drain(&mut self) {
+        while self.step() {}
+    }
+
+    /// One pump iteration: expire queued deadlines, fill free row
+    /// slots, evict expired rows, then run one decode step over the
+    /// active session. Returns false once idle.
+    pub fn step(&mut self) -> bool {
+        if self.idle() {
+            self.session = None;
+            return false;
+        }
+        self.pump_no += 1;
+        if let Some(ms) = self.faults.as_ref().and_then(|p| p.queue_stall(self.pump_no)) {
+            self.clock.advance_ms(ms);
+        }
+        self.expire_queue();
+        let mut sess = match self.session.take() {
+            // breaker tripped between requests: retire an idle packed
+            // session so the next cohort runs on the dense fallback
+            // (in-flight packed rows are never yanked — they finish, and
+            // any that poison fall back individually)
+            Some(s) if self.degraded && !s.dense && s.active() == 0 => {
+                if self.queue.is_empty() {
+                    return false;
+                }
+                self.new_session()
+            }
+            Some(s) => s,
+            None => {
+                if self.queue.is_empty() {
+                    return false;
+                }
+                self.new_session()
+            }
+        };
+        self.fill_rows(&mut sess);
+        self.evict_expired(&mut sess);
+        if sess.active() == 0 {
+            // nothing runnable on this time axis: drop the session so the
+            // head of the queue gets a fresh one next pump (admission
+            // guarantees it fits an empty axis)
+            return !self.queue.is_empty();
+        }
+        self.step_no += 1;
+        if self.faults.as_ref().map(|p| p.kill_at_step(self.step_no)).unwrap_or(false) {
+            self.abort_session(sess);
+            return true;
+        }
+
+        // assemble the step: active rows feed their next prompt token
+        // (prefill phase) or their last generated token; free slots feed
+        // masked padding
+        let b = sess.rows.len();
+        let mut toks = vec![0i32; b];
+        let mut valid = vec![false; b];
+        let mut poison = vec![false; b];
+        let mut any_poison = false;
+        for (slot, row) in sess.rows.iter().enumerate() {
+            if let Some(r) = row {
+                valid[slot] = true;
+                toks[slot] = if r.pos < r.prompt.len() { r.prompt[r.pos] } else { r.last };
+                if let Some(p) = &self.faults {
+                    if p.poison_logits(r.id, r.fed + 1) {
+                        poison[slot] = true;
+                        any_poison = true;
+                    }
+                }
+            }
+        }
+        let model: &ServeModel =
+            if sess.dense { self.fallback.unwrap_or(self.primary) } else { self.primary };
+        let t_step = std::time::Instant::now();
+        let res = model.decode_step(
+            &toks,
+            &valid,
+            &mut sess.cache,
+            &mut sess.scratch,
+            if any_poison { Some(&poison) } else { None },
+        );
+        crate::obs::hist_record(
+            "gateway.decode_step_us",
+            t_step.elapsed().as_secs_f64() * 1e6,
+        );
+        if let Some(ms) = self.faults.as_ref().and_then(|p| p.slow_step(self.step_no)) {
+            self.clock.advance_ms(ms);
+        }
+
+        match res {
+            Err(e) => {
+                // batch-wide failure (KV capacity): every active row gets
+                // the typed error; admission should make this unreachable,
+                // but "should" is not a failure policy
+                for slot in 0..b {
+                    if let Some(r) = sess.rows[slot].take() {
+                        self.finish(r.id, RequestOutcome::Failed(e.clone()));
+                    }
+                }
+            }
+            Ok(step) => {
+                for slot in 0..b {
+                    let Some(mut r) = sess.rows[slot].take() else { continue };
+                    r.fed += 1;
+                    if step.poisoned[slot] {
+                        let packed = !sess.dense;
+                        self.handle_poisoned(r, slot, packed);
+                        continue; // slot freed for the next joiner
+                    }
+                    let tok = step.toks[slot];
+                    if r.pos < r.prompt.len() {
+                        r.pos += 1;
+                        if r.pos == r.prompt.len() {
+                            // prefill capture: seed for the first decode
+                            // step, not an output token — same convention
+                            // as `generate` (outputs are the max_new
+                            // decode-loop tokens)
+                            r.last = tok;
+                        }
+                    } else {
+                        r.out.push(tok);
+                        r.last = tok;
+                    }
+                    if r.out.len() >= r.max_new {
+                        if !sess.dense {
+                            self.breaker.record_success();
+                        }
+                        let latency = self.clock.now_ms().saturating_sub(r.submit_ms);
+                        let degraded = sess.dense;
+                        self.finish(
+                            r.id,
+                            RequestOutcome::Completed {
+                                tokens: r.out,
+                                latency_ms: latency,
+                                degraded,
+                            },
+                        );
+                    } else {
+                        sess.rows[slot] = Some(r);
+                    }
+                }
+                self.session = Some(sess);
+            }
+        }
+        true
+    }
+
+    fn new_session(&self) -> Session {
+        let b = self.cfg.max_batch.max(1);
+        let budget = self.cfg.kv_slot_budget.max(1);
+        let dense = self.degraded && self.fallback.is_some();
+        let cfg = &self.primary.cfg;
+        Session {
+            cache: KvCache::with_limits(cfg, b, budget.min(64), budget),
+            scratch: DecodeScratch::new(cfg, b),
+            rows: (0..b).map(|_| None).collect(),
+            dense,
+        }
+    }
+
+    /// Fail queued requests whose deadline expired before they ever ran.
+    fn expire_queue(&mut self) {
+        let now = self.clock.now_ms();
+        let q = std::mem::take(&mut self.queue);
+        for a in q {
+            let expired = a
+                .deadline_ms
+                .map(|d| now.saturating_sub(a.submit_ms) > d)
+                .unwrap_or(false);
+            if expired {
+                self.finish(
+                    a.id,
+                    RequestOutcome::DeadlineMissed { generated: 0, stage: DeadlineStage::Queue },
+                );
+            } else {
+                self.queue.push_back(a);
+            }
+        }
+    }
+
+    /// Move queued requests into free row slots, FIFO, while they fit
+    /// the session's remaining KV time axis. A recycled slot's validity
+    /// column is cleared first, so the joiner is isolated from its
+    /// predecessor by construction.
+    fn fill_rows(&mut self, sess: &mut Session) {
+        let now = self.clock.now_ms();
+        for slot in 0..sess.rows.len() {
+            if sess.rows[slot].is_some() {
+                continue;
+            }
+            let fits = match self.queue.front() {
+                Some(head) => {
+                    sess.cache.len + head.prompt.len() + head.max_new
+                        <= self.cfg.kv_slot_budget
+                }
+                None => break,
+            };
+            if !fits {
+                // FIFO: no overtaking; the head waits for a fresh axis
+                break;
+            }
+            let a = self.queue.pop_front().expect("checked front");
+            sess.cache.reset_row(slot);
+            self.ledger.reserve(a.id, a.prompt.len() + a.max_new);
+            crate::obs::hist_record(
+                "gateway.time_in_queue_ms",
+                now.saturating_sub(a.submit_ms) as f64,
+            );
+            sess.rows[slot] = Some(RowState {
+                id: a.id,
+                prompt: a.prompt,
+                max_new: a.max_new,
+                deadline_ms: a.deadline_ms,
+                submit_ms: a.submit_ms,
+                fed: 0,
+                pos: 0,
+                out: Vec::new(),
+                last: 0,
+                requeued: a.requeued,
+            });
+        }
+    }
+
+    /// Evict in-flight rows past their deadline. Survivors are
+    /// untouched: an evicted row simply stops being fed, and its mask
+    /// column was never visible to any other row.
+    fn evict_expired(&mut self, sess: &mut Session) {
+        let now = self.clock.now_ms();
+        for slot in 0..sess.rows.len() {
+            let expired = sess.rows[slot].as_ref().map(|r| r.expired(now)).unwrap_or(false);
+            if expired {
+                let r = sess.rows[slot].take().expect("checked some");
+                self.finish(
+                    r.id,
+                    RequestOutcome::DeadlineMissed {
+                        generated: r.out.len(),
+                        stage: DeadlineStage::Decode,
+                    },
+                );
+            }
+        }
+    }
+
+    /// Simulated engine crash mid-session (injected kill): in-flight
+    /// rows get one requeue (deterministic greedy decode reproduces the
+    /// exact prefix, so the discarded partial output is lossless); a
+    /// second abort fails them typed.
+    fn abort_session(&mut self, mut sess: Session) {
+        let mut requeued = 0usize;
+        let mut failed = 0usize;
+        for slot in 0..sess.rows.len() {
+            if let Some(r) = sess.rows[slot].take() {
+                self.ledger.release(r.id);
+                if r.requeued {
+                    failed += 1;
+                    self.finish(r.id, RequestOutcome::Failed(ServeError::SessionAborted));
+                } else {
+                    requeued += 1;
+                    self.counters.requeued += 1;
+                    self.queue.push_front(Admitted {
+                        id: r.id,
+                        prompt: r.prompt,
+                        max_new: r.max_new,
+                        deadline_ms: r.deadline_ms,
+                        submit_ms: r.submit_ms,
+                        requeued: true,
+                    });
+                }
+            }
+        }
+        crate::obs::warn(
+            "gateway_session_abort",
+            &format!(
+                "[gateway] session aborted at step {}: {requeued} requeued, {failed} failed",
+                self.step_no
+            ),
+            &[
+                ("step", self.step_no.into()),
+                ("requeued", requeued.into()),
+                ("failed", failed.into()),
+            ],
+        );
+    }
+
+    /// A row's logits came back non-finite. On the packed path: count
+    /// it against the breaker and retry the request on the dense
+    /// fallback under the robust retry policy; otherwise fail it typed.
+    fn handle_poisoned(&mut self, r: RowState, slot: usize, packed: bool) {
+        let step = r.fed;
+        if packed {
+            if self.breaker.record_failure() && self.fallback.is_some() {
+                self.degraded = true;
+                crate::obs::warn(
+                    "gateway_degrade",
+                    &format!(
+                        "[gateway] circuit breaker tripped after repeated packed-path \
+                         failures: all sessions fall back to {}",
+                        self.fallback.map(|f| f.label.as_str()).unwrap_or("?")
+                    ),
+                    &[("scope", "gateway".into()), ("request", r.id.into())],
+                );
+            }
+            if let Some(fb) = self.fallback {
+                crate::obs::event(
+                    "gateway_degrade",
+                    &[("scope", "request".into()), ("request", r.id.into()), ("step", step.into())],
+                );
+                let now = self.clock.now_ms();
+                let expired = r
+                    .deadline_ms
+                    .map(|d| now.saturating_sub(r.submit_ms) > d)
+                    .unwrap_or(false);
+                if expired {
+                    self.finish(
+                        r.id,
+                        RequestOutcome::DeadlineMissed {
+                            generated: r.out.len(),
+                            stage: DeadlineStage::Decode,
+                        },
+                    );
+                    return;
+                }
+                let prompt = &r.prompt;
+                let max_new = r.max_new;
+                let res = with_retry(&self.cfg.retry, "gateway dense fallback", || {
+                    let (mut outs, _) = fb.generate(std::slice::from_ref(prompt), max_new)?;
+                    Ok(outs.remove(0))
+                });
+                match res {
+                    Ok(tokens) => {
+                        let latency = self.clock.now_ms().saturating_sub(r.submit_ms);
+                        self.finish(
+                            r.id,
+                            RequestOutcome::Completed {
+                                tokens,
+                                latency_ms: latency,
+                                degraded: true,
+                            },
+                        );
+                    }
+                    Err(e) => {
+                        self.finish(
+                            r.id,
+                            RequestOutcome::Failed(ServeError::FallbackFailed(format!(
+                                "{e:#}"
+                            ))),
+                        );
+                    }
+                }
+                return;
+            }
+        }
+        self.finish(r.id, RequestOutcome::Failed(ServeError::PoisonedLogits { row: slot, step }));
+    }
+
+    /// Record a terminal outcome: release KV accounting, bump counters,
+    /// emit telemetry. Every admitted request passes through here
+    /// exactly once (request conservation).
+    fn finish(&mut self, id: u64, outcome: RequestOutcome) {
+        self.ledger.release(id);
+        match &outcome {
+            RequestOutcome::Completed { latency_ms, degraded, tokens } => {
+                self.counters.completed += 1;
+                if *degraded {
+                    self.counters.degraded += 1;
+                }
+                crate::obs::hist_record("gateway.request_latency_ms", *latency_ms as f64);
+                crate::obs::event(
+                    "gateway_complete",
+                    &[
+                        ("id", id.into()),
+                        ("tokens", tokens.len().into()),
+                        ("latency_ms", (*latency_ms).into()),
+                        ("degraded", (*degraded).into()),
+                    ],
+                );
+            }
+            RequestOutcome::DeadlineMissed { generated, stage } => {
+                self.counters.deadline_missed += 1;
+                crate::obs::event(
+                    "gateway_deadline_miss",
+                    &[
+                        ("id", id.into()),
+                        ("stage", stage.tag().into()),
+                        ("generated", (*generated).into()),
+                    ],
+                );
+            }
+            RequestOutcome::Failed(e) => {
+                self.counters.failed += 1;
+                crate::obs::warn(
+                    "gateway_request_failed",
+                    &format!("[gateway] request {id} failed: {e}"),
+                    &[("id", id.into()), ("error", format!("{e}").into())],
+                );
+            }
+        }
+        let prev = self.outcomes.insert(id, outcome);
+        debug_assert!(prev.is_none(), "double outcome for request {id}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelConfig, Params};
+    use crate::serve::PrefillMode;
+    use crate::tensor::Pcg32;
+
+    fn nano(seed: u64) -> (ModelConfig, Params) {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let mut rng = Pcg32::seeded(seed);
+        let p = Params::init(&cfg, &mut rng);
+        (cfg, p)
+    }
+
+    fn solo(m: &ServeModel, prompt: &[i32], new: usize) -> Vec<i32> {
+        let (mut outs, _) =
+            m.generate_with(&[prompt.to_vec()], new, PrefillMode::PerToken).unwrap();
+        outs.remove(0)
+    }
+
+    #[test]
+    fn sheds_on_queue_full_kv_budget_and_invalid() {
+        let (_, p) = nano(20);
+        let m = ServeModel::dense(&p);
+        let cfg = GatewayConfig {
+            queue_depth: 2,
+            max_batch: 1,
+            kv_slot_budget: 16,
+            ..Default::default()
+        };
+        let mut gw = Gateway::new(&m, cfg);
+        assert!(gw.submit(Request::new(vec![1, 2], 4)).is_ok());
+        assert!(gw.submit(Request::new(vec![3, 4], 4)).is_ok());
+        match gw.submit(Request::new(vec![5, 6], 4)) {
+            Err(ShedReason::QueueFull { depth: 2 }) => {}
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        match gw.submit(Request::new(vec![1; 10], 10)) {
+            Err(ShedReason::KvBudget { need: 20, budget: 16 }) => {}
+            other => panic!("expected KvBudget, got {other:?}"),
+        }
+        match gw.submit(Request::new(vec![], 4)) {
+            Err(ShedReason::InvalidPrompt(_)) => {}
+            other => panic!("expected InvalidPrompt, got {other:?}"),
+        }
+        match gw.submit(Request::new(vec![100_000], 4)) {
+            Err(ShedReason::InvalidPrompt(_)) => {}
+            other => panic!("expected InvalidPrompt (vocab), got {other:?}"),
+        }
+        let c = gw.counters();
+        assert_eq!(c.submitted, 6);
+        assert_eq!(c.admitted, 2);
+        assert_eq!(c.shed, 4);
+    }
+
+    #[test]
+    fn continuous_batching_is_bit_identical_to_solo() {
+        // more requests than row slots: later requests join mid-session
+        // as slots free up (recycled columns), and every output must
+        // equal its solo run exactly
+        let (_, p) = nano(21);
+        let m = ServeModel::dense(&p);
+        let cfg = GatewayConfig {
+            queue_depth: 16,
+            max_batch: 2,
+            kv_slot_budget: 256,
+            ..Default::default()
+        };
+        let mut gw = Gateway::new(&m, cfg);
+        let reqs: Vec<(Vec<i32>, usize)> = vec![
+            (vec![3, 17, 40, 9], 6),
+            (vec![12, 7], 3),
+            (vec![1, 2, 3, 4, 5], 5),
+            (vec![60, 61], 8),
+            (vec![9, 9, 9], 2),
+        ];
+        let ids: Vec<u64> = reqs
+            .iter()
+            .map(|(p, n)| gw.submit(Request::new(p.clone(), *n)).unwrap())
+            .collect();
+        gw.drain();
+        assert!(gw.idle());
+        assert_eq!(gw.kv_in_use(), 0, "leaked KV reservations");
+        for (id, (prompt, new)) in ids.iter().zip(&reqs) {
+            match &gw.outcomes()[id] {
+                RequestOutcome::Completed { tokens, degraded: false, .. } => {
+                    assert_eq!(tokens, &solo(&m, prompt, *new), "request {id} diverged");
+                }
+                other => panic!("request {id}: expected completion, got {other:?}"),
+            }
+        }
+        assert_eq!(gw.counters().completed, 5);
+    }
+
+    #[test]
+    fn deadline_eviction_keeps_survivors_exact() {
+        use crate::robust::FaultPlan;
+        let (_, p) = nano(22);
+        let m = ServeModel::dense(&p);
+        let cfg = GatewayConfig {
+            queue_depth: 8,
+            max_batch: 2,
+            kv_slot_budget: 256,
+            ..Default::default()
+        };
+        // decode step 3 "takes" 10^7 ms of synthetic time: the 5s-deadline
+        // row must evict, the unbounded row must finish bit-exact
+        let plan = Rc::new(FaultPlan::parse("slow@3.10000000").unwrap());
+        let mut gw = Gateway::new(&m, cfg).with_faults(plan);
+        let survivor = vec![3i32, 17, 40, 9, 22, 5];
+        let victim = vec![12i32, 7, 44];
+        let sid = gw.submit(Request::new(survivor.clone(), 8)).unwrap();
+        let vid = gw.submit(Request::new(victim.clone(), 8).with_deadline(5_000)).unwrap();
+        gw.drain();
+        match &gw.outcomes()[&vid] {
+            RequestOutcome::DeadlineMissed { stage: DeadlineStage::Decode, .. } => {}
+            other => panic!("victim: expected decode-stage miss, got {other:?}"),
+        }
+        match &gw.outcomes()[&sid] {
+            RequestOutcome::Completed { tokens, .. } => {
+                assert_eq!(tokens, &solo(&m, &survivor, 8), "survivor perturbed by eviction");
+            }
+            other => panic!("survivor: expected completion, got {other:?}"),
+        }
+        assert_eq!(gw.kv_in_use(), 0);
+    }
+
+    #[test]
+    fn queue_deadline_expires_without_running() {
+        use crate::robust::FaultPlan;
+        let (_, p) = nano(23);
+        let m = ServeModel::dense(&p);
+        let cfg =
+            GatewayConfig { max_batch: 1, kv_slot_budget: 256, ..Default::default() };
+        // the stall hits pump 1 before any decode step runs
+        let plan = Rc::new(FaultPlan::parse("stall@1.10000000").unwrap());
+        let mut gw = Gateway::new(&m, cfg).with_faults(plan);
+        let id = gw.submit(Request::new(vec![1, 2, 3], 4).with_deadline(1_000)).unwrap();
+        gw.drain();
+        match &gw.outcomes()[&id] {
+            RequestOutcome::DeadlineMissed { generated: 0, stage: DeadlineStage::Queue } => {}
+            other => panic!("expected queue-stage miss, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn breaker_trips_and_degrades_to_dense() {
+        use crate::robust::FaultPlan;
+        let (_, p) = nano(24);
+        let packed = ServeModel::packed_rtn(&p, 2).unwrap();
+        let dense = ServeModel::dense(&p);
+        let cfg = GatewayConfig {
+            queue_depth: 8,
+            max_batch: 1,
+            kv_slot_budget: 256,
+            breaker_threshold: 2,
+            ..Default::default()
+        };
+        // poison requests 0 and 1 at their first step on the packed path
+        let plan = Rc::new(FaultPlan::parse("poison@0.1,poison@1.1").unwrap());
+        let mut gw = Gateway::new(&packed, cfg).with_fallback(&dense).with_faults(plan);
+        let prompts =
+            [vec![3i32, 17, 40], vec![12i32, 7, 44, 9], vec![1i32, 2, 3, 4]];
+        let ids: Vec<u64> =
+            prompts.iter().map(|p| gw.submit(Request::new(p.clone(), 4)).unwrap()).collect();
+        gw.drain();
+        assert!(gw.is_degraded(), "two consecutive packed failures must trip the breaker");
+        // poisoned requests completed degraded on the dense fallback
+        for (i, id) in ids.iter().take(2).enumerate() {
+            match &gw.outcomes()[id] {
+                RequestOutcome::Completed { tokens, degraded: true, .. } => {
+                    assert_eq!(tokens, &solo(&dense, &prompts[i], 4));
+                }
+                other => panic!("request {id}: expected degraded completion, got {other:?}"),
+            }
+        }
+        // the third ran after the trip: whole session on the dense path
+        match &gw.outcomes()[&ids[2]] {
+            RequestOutcome::Completed { tokens, degraded: true, .. } => {
+                assert_eq!(tokens, &solo(&dense, &prompts[2], 4));
+            }
+            other => panic!("post-trip request: expected dense completion, got {other:?}"),
+        }
+        assert_eq!(gw.counters().degraded, 3);
+        assert_eq!(gw.kv_in_use(), 0);
+    }
+
+    #[test]
+    fn poisoned_row_without_fallback_fails_typed() {
+        use crate::robust::FaultPlan;
+        let (_, p) = nano(25);
+        let m = ServeModel::dense(&p);
+        let cfg =
+            GatewayConfig { max_batch: 2, kv_slot_budget: 256, ..Default::default() };
+        let plan = Rc::new(FaultPlan::parse("poison@1.2").unwrap());
+        let mut gw = Gateway::new(&m, cfg).with_faults(plan);
+        let ok = gw.submit(Request::new(vec![3, 17, 40, 9], 5)).unwrap();
+        let bad = gw.submit(Request::new(vec![12, 7, 44], 5)).unwrap();
+        gw.drain();
+        match &gw.outcomes()[&bad] {
+            RequestOutcome::Failed(ServeError::PoisonedLogits { step: 2, .. }) => {}
+            other => panic!("expected PoisonedLogits at step 2, got {other:?}"),
+        }
+        match &gw.outcomes()[&ok] {
+            RequestOutcome::Completed { tokens, .. } => {
+                assert_eq!(tokens, &solo(&m, &[3, 17, 40, 9], 5), "healthy row perturbed");
+            }
+            other => panic!("expected completion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn session_kill_requeues_once_then_fails() {
+        use crate::robust::FaultPlan;
+        let (_, p) = nano(26);
+        let m = ServeModel::dense(&p);
+        let cfg =
+            GatewayConfig { max_batch: 2, kv_slot_budget: 256, ..Default::default() };
+        // kill the session at global decode steps 2 AND 4: the requeued
+        // requests die a second time and must fail typed
+        let plan = Rc::new(FaultPlan::parse("kill@2,kill@4").unwrap());
+        let mut gw = Gateway::new(&m, cfg).with_faults(plan);
+        let a = gw.submit(Request::new(vec![3, 17, 40, 9], 4)).unwrap();
+        let b = gw.submit(Request::new(vec![12, 7], 4)).unwrap();
+        gw.drain();
+        for id in [a, b] {
+            match &gw.outcomes()[&id] {
+                RequestOutcome::Failed(ServeError::SessionAborted) => {}
+                other => panic!("request {id}: expected SessionAborted, got {other:?}"),
+            }
+        }
+        assert_eq!(gw.counters().requeued, 2);
+        assert_eq!(gw.kv_in_use(), 0);
+        // single kill: requests recover via requeue and complete exactly
+        let plan2 = Rc::new(FaultPlan::parse("kill@2").unwrap());
+        let cfg2 =
+            GatewayConfig { max_batch: 2, kv_slot_budget: 256, ..Default::default() };
+        let mut gw2 = Gateway::new(&m, cfg2).with_faults(plan2);
+        let a2 = gw2.submit(Request::new(vec![3, 17, 40, 9], 4)).unwrap();
+        gw2.drain();
+        match &gw2.outcomes()[&a2] {
+            RequestOutcome::Completed { tokens, .. } => {
+                assert_eq!(tokens, &solo(&m, &[3, 17, 40, 9], 4));
+            }
+            other => panic!("expected post-requeue completion, got {other:?}"),
+        }
+    }
+}

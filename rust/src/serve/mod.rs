@@ -8,9 +8,17 @@
 //! tokens whether it is served solo or padded alongside longer batchmates
 //! (see README "Serving" for the layout and masking contract).
 
+pub mod gateway;
+pub mod sched;
+
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
+
+pub use gateway::Gateway;
+pub use sched::{
+    GatewayConfig, GatewayCounters, Request, RequestOutcome, ServeError, ShedReason,
+};
 
 use crate::coordinator::par::CalibReport;
 use crate::model::hostfwd::{rmsnorm_rows, silu, LinearOp};
@@ -169,6 +177,9 @@ pub struct KvCache {
     /// Cache slots filled so far (shared time axis, includes padding).
     pub len: usize,
     cap: usize,
+    /// Hard slot ceiling: growth past this returns a typed
+    /// `ServeError::KvCapacity` instead of reallocating without bound.
+    max_slots: usize,
     b: usize,
     d_kv: usize,
     /// `valid[slot * b + r]`: slot holds a real (non-padding) token of row r.
@@ -183,15 +194,28 @@ impl KvCache {
     }
 
     /// Preallocate `cap` cache slots so the decode loop never grows the
-    /// buffers. `generate` sizes this as prompt_len + max_new.
+    /// buffers. `generate` sizes this as prompt_len + max_new. No slot
+    /// ceiling — growth doubles forever (use [`Self::with_limits`] to
+    /// cap it).
     pub fn with_capacity(cfg: &ModelConfig, b: usize, cap: usize) -> KvCache {
-        let cap = cap.max(1);
+        Self::with_limits(cfg, b, cap, usize::MAX)
+    }
+
+    /// Preallocate `cap` slots with a hard ceiling of `max_slots`: a
+    /// decode step that would need slot `max_slots + 1` gets a typed
+    /// error instead of an unbounded reallocation. The gateway sizes
+    /// this with its KV budget so a runaway session can never OOM the
+    /// box.
+    pub fn with_limits(cfg: &ModelConfig, b: usize, cap: usize, max_slots: usize) -> KvCache {
+        let max_slots = max_slots.max(1);
+        let cap = cap.clamp(1, max_slots);
         let d_kv = cfg.d_kv();
         KvCache {
             k: vec![vec![0.0; cap * b * d_kv]; cfg.n_layers],
             v: vec![vec![0.0; cap * b * d_kv]; cfg.n_layers],
             len: 0,
             cap,
+            max_slots,
             b,
             d_kv,
             valid: vec![false; cap * b],
@@ -203,17 +227,25 @@ impl KvCache {
         self.cap
     }
 
+    pub fn max_slots(&self) -> usize {
+        self.max_slots
+    }
+
     /// Row r's own token count (its next RoPE position).
     pub fn row_pos(&self, r: usize) -> usize {
         self.row_pos[r]
     }
 
     /// Grow to at least `need` slots (doubling; no-op within capacity).
-    fn reserve(&mut self, need: usize) {
+    /// Refuses with `ServeError::KvCapacity` past `max_slots`.
+    fn try_reserve(&mut self, need: usize) -> Result<(), ServeError> {
         if need <= self.cap {
-            return;
+            return Ok(());
         }
-        let cap = need.next_power_of_two().max(self.cap * 2);
+        if need > self.max_slots {
+            return Err(ServeError::KvCapacity { need, max_slots: self.max_slots });
+        }
+        let cap = need.next_power_of_two().max(self.cap * 2).min(self.max_slots);
         for kl in self.k.iter_mut() {
             kl.resize(cap * self.b * self.d_kv, 0.0);
         }
@@ -222,6 +254,19 @@ impl KvCache {
         }
         self.valid.resize(cap * self.b, false);
         self.cap = cap;
+        Ok(())
+    }
+
+    /// Recycle row `r` for a new session occupant: clear its validity
+    /// column (so the newcomer can never attend a previous request's
+    /// KV) and reset its RoPE position. The k/v payloads need no
+    /// zeroing — masked slots are unreachable by construction. This is
+    /// what makes gateway slot reuse bit-exact.
+    pub fn reset_row(&mut self, r: usize) {
+        for t in 0..self.len {
+            self.valid[t * self.b + r] = false;
+        }
+        self.row_pos[r] = 0;
     }
 }
 
@@ -309,14 +354,58 @@ pub struct DecodeStats {
     pub weight_bytes: usize,
 }
 
-fn argmax_row(row: &[f32]) -> i32 {
-    // total_cmp: NaN logits (e.g. a degenerate quantized model) must not
-    // panic the decode loop
-    row.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.total_cmp(b.1))
-        .map(|(i, _)| i as i32)
-        .unwrap_or(0)
+/// NaN-aware greedy argmax: `None` if the row is empty or contains any
+/// non-finite logit. The old path used a `total_cmp` max with
+/// `unwrap_or(0)`, which silently decoded token 0 from poisoned logits —
+/// a garbage token indistinguishable from a real one. Ties keep the
+/// last maximal index, matching the previous `max_by` behavior exactly
+/// for finite inputs.
+fn argmax_checked(row: &[f32]) -> Option<i32> {
+    let mut best = f32::NEG_INFINITY;
+    let mut best_i: Option<i32> = None;
+    for (i, &v) in row.iter().enumerate() {
+        if !v.is_finite() {
+            return None;
+        }
+        if best_i.is_none() || v >= best {
+            best = v;
+            best_i = Some(i as i32);
+        }
+    }
+    best_i
+}
+
+/// One decode (or prefill) step's per-row results. A poisoned row's
+/// token is a placeholder 0 and `poisoned[r]` is set; callers decide
+/// whether that fails the row (gateway) or the batch (`generate`).
+pub(crate) struct StepOut {
+    pub toks: Vec<i32>,
+    pub poisoned: Vec<bool>,
+}
+
+impl StepOut {
+    fn from_logits(
+        logits: &mut [f32],
+        b: usize,
+        v: usize,
+        force_poison: Option<&[bool]>,
+    ) -> StepOut {
+        let mut toks = vec![0i32; b];
+        let mut poisoned = vec![false; b];
+        for r in 0..b {
+            let row = &mut logits[r * v..(r + 1) * v];
+            if force_poison.map(|p| p[r]).unwrap_or(false) && !row.is_empty() {
+                // fault injection corrupts the real buffer so detection
+                // exercises the production argmax path, not a shortcut
+                row[0] = f32::NAN;
+            }
+            match argmax_checked(row) {
+                Some(t) => toks[r] = t,
+                None => poisoned[r] = true,
+            }
+        }
+        StepOut { toks, poisoned }
+    }
 }
 
 impl ServeModel {
@@ -325,20 +414,23 @@ impl ServeModel {
     /// `step_valid[r]` marks whether row r's token is real; a padding
     /// token's k/v are written but masked out of that row's attention for
     /// the rest of the session, and its `row_pos` does not advance.
-    fn decode_step(
+    /// `poison[r]` (fault injection) corrupts row r's logits with NaN
+    /// before the argmax so the sentinel path is exercised end to end.
+    pub(crate) fn decode_step(
         &self,
         x_tok: &[i32],
         step_valid: &[bool],
         cache: &mut KvCache,
         scratch: &mut DecodeScratch,
-    ) -> Vec<i32> {
+        poison: Option<&[bool]>,
+    ) -> Result<StepOut, ServeError> {
         let cfg = &self.cfg;
         let b = cache.b;
         debug_assert_eq!(x_tok.len(), b);
         debug_assert_eq!(step_valid.len(), b);
         let d = cfg.d_model;
         let slot = cache.len;
-        cache.reserve(slot + 1);
+        cache.try_reserve(slot + 1)?;
         let t = slot + 1;
         let dkv = cache.d_kv;
 
@@ -494,7 +586,7 @@ impl ServeModel {
             &mut scratch.logits,
         );
         let v = cfg.vocab_size;
-        (0..b).map(|r| argmax_row(&scratch.logits[r * v..(r + 1) * v])).collect()
+        Ok(StepOut::from_logits(&mut scratch.logits, b, v, poison))
     }
 
     /// Token-by-token prefill through the decode step (the benchmark
@@ -507,10 +599,14 @@ impl ServeModel {
         plens: &[usize],
         cache: &mut KvCache,
         scratch: &mut DecodeScratch,
-    ) -> Vec<i32> {
+    ) -> Result<StepOut, ServeError> {
         let b = prompts.len();
         let tmax = plens.iter().copied().max().unwrap_or(0);
         let mut last = vec![0i32; b];
+        // poison status is sampled only at each row's own capture step:
+        // intermediate prefill logits are discarded, exactly as in the
+        // batched path (which never computes them)
+        let mut poisoned = vec![false; b];
         let mut toks = vec![0i32; b];
         let mut valid = vec![false; b];
         for pos in 0..tmax {
@@ -518,14 +614,15 @@ impl ServeModel {
                 valid[r] = pos < plens[r];
                 toks[r] = if valid[r] { prompts[r][pos] } else { 0 };
             }
-            let step = self.decode_step(&toks, &valid, cache, scratch);
+            let step = self.decode_step(&toks, &valid, cache, scratch, None)?;
             for r in 0..b {
                 if pos + 1 == plens[r] {
-                    last[r] = step[r];
+                    last[r] = step.toks[r];
+                    poisoned[r] = step.poisoned[r];
                 }
             }
         }
-        last
+        Ok(StepOut { toks: last, poisoned })
     }
 
     /// Batched prefill: one multi-token forward over the padded `[b,
@@ -540,14 +637,14 @@ impl ServeModel {
         prompts: &[Vec<i32>],
         plens: &[usize],
         cache: &mut KvCache,
-    ) -> Vec<i32> {
+    ) -> Result<StepOut, ServeError> {
         let cfg = &self.cfg;
         let b = prompts.len();
         let d = cfg.d_model;
         let dkv = cfg.d_kv();
         let f = cfg.d_ff;
         let tmax = plens.iter().copied().max().unwrap_or(0);
-        cache.reserve(tmax);
+        cache.try_reserve(tmax)?;
         let rows = b * tmax;
 
         let nh = cfg.n_heads;
@@ -695,7 +792,7 @@ impl ServeModel {
         let v = cfg.vocab_size;
         let mut logits = vec![0.0f32; b * v];
         linalg::matmul_bt_into(&hl, b, d, &self.emb.data, v, &mut logits);
-        (0..b).map(|r| argmax_row(&logits[r * v..(r + 1) * v])).collect()
+        Ok(StepOut::from_logits(&mut logits, b, v, None))
     }
 
     /// Batched greedy generation (batched prefill); returns outputs +
@@ -740,20 +837,31 @@ impl ServeModel {
         let _sp = crate::span!("serve.generate", &self.label);
 
         let t0 = std::time::Instant::now();
-        let mut last = match mode {
-            PrefillMode::Batched => self.prefill_batched(prompts, &plens, &mut cache),
+        let pre = match mode {
+            PrefillMode::Batched => self.prefill_batched(prompts, &plens, &mut cache)?,
             PrefillMode::PerToken => {
-                self.prefill_per_token(prompts, &plens, &mut cache, &mut scratch)
+                self.prefill_per_token(prompts, &plens, &mut cache, &mut scratch)?
             }
         };
+        if let Some(r) = pre.poisoned.iter().position(|&p| p) {
+            return Err(ServeError::PoisonedLogits { row: r, step: plens[r] }.into());
+        }
+        let mut last = pre.toks;
         let prefill_s = t0.elapsed().as_secs_f64();
 
         let t1 = std::time::Instant::now();
         let all_valid = vec![true; b];
         let mut outs: Vec<Vec<i32>> = vec![Vec::with_capacity(max_new); b];
-        for _ in 0..max_new {
+        for gen in 0..max_new {
             let ts = std::time::Instant::now();
-            last = self.decode_step(&last, &all_valid, &mut cache, &mut scratch);
+            let step = self.decode_step(&last, &all_valid, &mut cache, &mut scratch, None)?;
+            if let Some(r) = step.poisoned.iter().position(|&p| p) {
+                // batch API has no per-row error channel; fail typed with
+                // the offending row (the gateway fails rows individually)
+                return Err(ServeError::PoisonedLogits { row: r, step: plens[r] + gen + 1 }
+                    .into());
+            }
+            last = step.toks;
             // per-request latency histogram for the packed qmatmul path
             crate::obs::hist_record(
                 "serve.decode_step_us",
@@ -855,7 +963,10 @@ mod tests {
         let mut scratch = DecodeScratch::new(&cfg, 1);
         let mut next = 0;
         for pos in 0..prompt.len() {
-            next = m.decode_step(&prompt[pos..pos + 1], &[true], &mut cache, &mut scratch)[0];
+            next = m
+                .decode_step(&prompt[pos..pos + 1], &[true], &mut cache, &mut scratch, None)
+                .unwrap()
+                .toks[0];
         }
 
         // full forward on host
@@ -938,7 +1049,7 @@ mod tests {
         let mut tok = 1i32;
         for pos in 0..6 {
             let t = if pos < 3 { prompt[0][pos] } else { tok };
-            tok = m.decode_step(&[t], &[true], &mut cache, &mut scratch)[0];
+            tok = m.decode_step(&[t], &[true], &mut cache, &mut scratch, None).unwrap().toks[0];
         }
         assert_eq!(cache.len, 6);
         assert!(cache.capacity() >= 6);
@@ -949,13 +1060,124 @@ mod tests {
         let mut scratch2 = DecodeScratch::new(&cfg, 1);
         let mut tok2 = 0i32;
         for pos in 0..3 {
-            tok2 = m.decode_step(&[prompt[0][pos]], &[true], &mut cache2, &mut scratch2)[0];
+            tok2 = m
+                .decode_step(&[prompt[0][pos]], &[true], &mut cache2, &mut scratch2, None)
+                .unwrap()
+                .toks[0];
         }
         let mut got = vec![tok2];
         for _ in 0..2 {
-            tok2 = m.decode_step(&[tok2], &[true], &mut cache2, &mut scratch2)[0];
+            tok2 = m.decode_step(&[tok2], &[true], &mut cache2, &mut scratch2, None)
+                .unwrap()
+                .toks[0];
             got.push(tok2);
         }
         assert_eq!(got, full[0]);
+    }
+
+    #[test]
+    fn argmax_checked_flags_non_finite() {
+        assert_eq!(argmax_checked(&[1.0, 3.0, 2.0]), Some(1));
+        // ties keep the LAST maximal index (old max_by behavior)
+        assert_eq!(argmax_checked(&[5.0, 5.0, 1.0]), Some(1));
+        assert_eq!(argmax_checked(&[]), None);
+        assert_eq!(argmax_checked(&[1.0, f32::NAN, 2.0]), None);
+        assert_eq!(argmax_checked(&[f32::INFINITY, 0.0]), None);
+        assert_eq!(argmax_checked(&[f32::NEG_INFINITY]), None);
+    }
+
+    #[test]
+    fn poisoned_logits_fail_typed_not_token_zero() {
+        // REGRESSION for the silent-NaN decode: a model whose logits go
+        // non-finite must surface ServeError::PoisonedLogits, not emit
+        // token 0 and keep going. NaN in the final-norm weights poisons
+        // the head logits of every row from the very first step.
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let mut rng = Pcg32::seeded(6);
+        let mut p = Params::init(&cfg, &mut rng);
+        p.get_mut("norm_f").data[0] = f32::NAN;
+        let m = ServeModel::dense(&p);
+        let err = m.generate(&[vec![1i32, 2, 3]], 4).unwrap_err();
+        let se = err.downcast_ref::<ServeError>().expect("typed ServeError");
+        assert!(matches!(se, ServeError::PoisonedLogits { row: 0, .. }), "{se:?}");
+    }
+
+    #[test]
+    fn poison_mask_trips_row_sentinel() {
+        // the fault-injection hook corrupts exactly the masked rows and
+        // leaves the others decoding normally
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let mut rng = Pcg32::seeded(7);
+        let p = Params::init(&cfg, &mut rng);
+        let m = ServeModel::dense(&p);
+        let mut cache = KvCache::new(&cfg, 2);
+        let mut scratch = DecodeScratch::new(&cfg, 2);
+        let out = m
+            .decode_step(&[1, 2], &[true, true], &mut cache, &mut scratch, Some(&[false, true]))
+            .unwrap();
+        assert!(!out.poisoned[0]);
+        assert!(out.poisoned[1]);
+        assert!((out.toks[0] as usize) < cfg.vocab_size);
+    }
+
+    #[test]
+    fn kv_cache_capacity_cap_is_typed_error() {
+        // growth at the boundary succeeds; one slot past max_slots is a
+        // typed KvCapacity error, not an unbounded reallocation
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let mut rng = Pcg32::seeded(8);
+        let p = Params::init(&cfg, &mut rng);
+        let m = ServeModel::dense(&p);
+        let mut cache = KvCache::with_limits(&cfg, 1, 2, 4);
+        assert_eq!(cache.max_slots(), 4);
+        let mut scratch = DecodeScratch::new(&cfg, 1);
+        let mut tok = 1i32;
+        for _ in 0..4 {
+            // grows 2 -> 4 at the boundary, never past the cap
+            tok = m.decode_step(&[tok], &[true], &mut cache, &mut scratch, None).unwrap().toks
+                [0];
+            assert!(cache.capacity() <= 4);
+        }
+        assert_eq!(cache.len, 4);
+        let err = m.decode_step(&[tok], &[true], &mut cache, &mut scratch, None).unwrap_err();
+        assert_eq!(err, ServeError::KvCapacity { need: 5, max_slots: 4 });
+        // cap stays intact after the refusal
+        assert_eq!(cache.len, 4);
+        assert_eq!(cache.capacity(), 4);
+    }
+
+    #[test]
+    fn kv_cache_reset_row_isolates_new_occupant() {
+        // a recycled row slot must not see its predecessor's KV: after
+        // reset_row the newcomer's decode matches a solo run exactly
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let mut rng = Pcg32::seeded(9);
+        let p = Params::init(&cfg, &mut rng);
+        let m = ServeModel::dense(&p);
+        let first = vec![3i32, 17, 40];
+        let second = vec![12i32, 7, 44, 9];
+
+        let mut cache = KvCache::with_capacity(&cfg, 1, 32);
+        let mut scratch = DecodeScratch::new(&cfg, 1);
+        for &t in &first {
+            m.decode_step(&[t], &[true], &mut cache, &mut scratch, None).unwrap();
+        }
+        cache.reset_row(0);
+        assert_eq!(cache.row_pos(0), 0);
+        let mut got = Vec::new();
+        let mut tok = 0i32;
+        for (i, &t) in second.iter().enumerate() {
+            tok = m.decode_step(&[t], &[true], &mut cache, &mut scratch, None).unwrap().toks[0];
+            if i + 1 == second.len() {
+                got.push(tok);
+            }
+        }
+        for _ in 0..3 {
+            tok = m.decode_step(&[tok], &[true], &mut cache, &mut scratch, None).unwrap().toks
+                [0];
+            got.push(tok);
+        }
+        let (solo, _) = m.generate(std::slice::from_ref(&second), 4).unwrap();
+        assert_eq!(got, solo[0], "recycled slot leaked its previous occupant's KV");
     }
 }

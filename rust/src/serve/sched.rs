@@ -1,0 +1,378 @@
+//! Scheduling primitives for the serving gateway: admission control,
+//! typed per-request errors and outcomes, KV-slot accounting, the
+//! packed-path circuit breaker, and the gateway clock.
+//!
+//! Everything here is deterministic and allocation-light; the policy
+//! lives in [`super::gateway`], these are the mechanism types. The
+//! gateway clock mixes real wall time with *synthetic* milliseconds
+//! added by injected faults (slow decode steps, queue stalls), so chaos
+//! drills can force deadline behavior deterministically: tests use
+//! synthetic delays orders of magnitude above real step time, and the
+//! outcome can never flip on scheduler jitter.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::robust::RetryPolicy;
+
+/// Typed serving-path errors. These are *row-level* failures: one
+/// request failing must never take down its batchmates, so the gateway
+/// surfaces them per request instead of bubbling a batch-wide `anyhow`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The row's logits contained NaN/Inf (or were empty) at `step`
+    /// (the request's own 1-based step, prefill included). The old path
+    /// silently decoded token 0 here.
+    PoisonedLogits { row: usize, step: usize },
+    /// The KV cache would need `need` slots but is capped at
+    /// `max_slots`; growth is refused instead of reallocating without
+    /// bound.
+    KvCapacity { need: usize, max_slots: usize },
+    /// The serving session was aborted (injected kill / engine crash)
+    /// and the request had already burned its requeue budget.
+    SessionAborted,
+    /// The degraded dense-path retry also failed; the message carries
+    /// the final retry error.
+    FallbackFailed(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::PoisonedLogits { row, step } => {
+                write!(f, "non-finite logits for row {row} at step {step}")
+            }
+            ServeError::KvCapacity { need, max_slots } => {
+                write!(f, "KV cache needs {need} slots, capped at {max_slots}")
+            }
+            ServeError::SessionAborted => write!(f, "serving session aborted"),
+            ServeError::FallbackFailed(e) => write!(f, "dense fallback failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Why a request was refused at the door. Shedding is load *control*,
+/// not failure: the caller gets the reason synchronously and can back
+/// off, retry elsewhere, or shrink the request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The bounded admission queue is at `queue_depth`.
+    QueueFull { depth: usize },
+    /// `prompt_len + max_new` can never fit the per-session KV budget;
+    /// admitting it would OOM mid-flight, so it is refused up front.
+    KvBudget { need: usize, budget: usize },
+    /// Empty prompt or token id outside the model vocabulary.
+    InvalidPrompt(String),
+}
+
+impl ShedReason {
+    /// Stable tag for telemetry events.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            ShedReason::QueueFull { .. } => "queue_full",
+            ShedReason::KvBudget { .. } => "kv_budget",
+            ShedReason::InvalidPrompt(_) => "invalid_prompt",
+        }
+    }
+}
+
+impl std::fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShedReason::QueueFull { depth } => write!(f, "admission queue full ({depth})"),
+            ShedReason::KvBudget { need, budget } => {
+                write!(f, "request needs {need} KV slots, session budget is {budget}")
+            }
+            ShedReason::InvalidPrompt(m) => write!(f, "invalid prompt: {m}"),
+        }
+    }
+}
+
+/// Where a deadline was missed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeadlineStage {
+    /// Expired while still waiting in the admission queue.
+    Queue,
+    /// Evicted mid-batch during decode.
+    Decode,
+}
+
+impl DeadlineStage {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            DeadlineStage::Queue => "queue",
+            DeadlineStage::Decode => "decode",
+        }
+    }
+}
+
+/// Terminal state of an *admitted* request. Request conservation (the
+/// chaos-drill invariant) says every admitted request reaches exactly
+/// one of these; shed requests are refused before admission and never
+/// get an outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RequestOutcome {
+    Completed {
+        tokens: Vec<i32>,
+        /// Submit-to-completion latency on the gateway clock.
+        latency_ms: u64,
+        /// Served by the dense fallback after a packed-path failure.
+        degraded: bool,
+    },
+    DeadlineMissed {
+        /// Tokens generated before eviction (discarded output).
+        generated: usize,
+        stage: DeadlineStage,
+    },
+    Failed(ServeError),
+}
+
+/// One generation request as submitted by a client.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    /// Latency budget in milliseconds from submission; `None` falls
+    /// back to the gateway's `default_deadline_ms` (which may itself be
+    /// `None` = no deadline).
+    pub deadline_ms: Option<u64>,
+}
+
+impl Request {
+    pub fn new(prompt: Vec<i32>, max_new: usize) -> Request {
+        Request { prompt, max_new, deadline_ms: None }
+    }
+
+    pub fn with_deadline(mut self, ms: u64) -> Request {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    /// KV slots this request can consume: one per prompt token plus one
+    /// per generated token.
+    pub fn kv_slots(&self) -> usize {
+        self.prompt.len() + self.max_new
+    }
+}
+
+/// Gateway knobs. Defaults are sized for the test presets; production
+/// callers set all of them explicitly.
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// Bounded admission queue depth; submissions beyond it are shed.
+    pub queue_depth: usize,
+    /// Batch width: concurrent rows in one serving session.
+    pub max_batch: usize,
+    /// Shared-time-axis KV slot cap per session. Admission guarantees
+    /// `cache.len + prompt_len + max_new <= budget` for every joining
+    /// row, so the cache can never OOM mid-flight.
+    pub kv_slot_budget: usize,
+    /// Deadline applied to requests that carry none.
+    pub default_deadline_ms: Option<u64>,
+    /// Consecutive packed-path row failures before the breaker trips
+    /// and the whole gateway degrades to the dense fallback; 0 disables
+    /// the breaker (per-request fallback still applies).
+    pub breaker_threshold: u32,
+    /// Retry policy for the degraded dense-path re-run of a failed
+    /// request.
+    pub retry: RetryPolicy,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            queue_depth: 32,
+            max_batch: 4,
+            kv_slot_budget: 4096,
+            default_deadline_ms: None,
+            breaker_threshold: 3,
+            retry: RetryPolicy::immediate(2),
+        }
+    }
+}
+
+/// Monotonic gateway time: real wall time plus synthetic milliseconds
+/// injected by faults. All deadlines, queue ages, and latency
+/// histograms read this clock, so a chaos drill advancing it by 10^7 ms
+/// produces the same evictions on any machine.
+#[derive(Debug)]
+pub struct GatewayClock {
+    t0: Instant,
+    synthetic_ms: u64,
+}
+
+impl Default for GatewayClock {
+    fn default() -> Self {
+        GatewayClock { t0: Instant::now(), synthetic_ms: 0 }
+    }
+}
+
+impl GatewayClock {
+    pub fn now_ms(&self) -> u64 {
+        (self.t0.elapsed().as_millis() as u64).saturating_add(self.synthetic_ms)
+    }
+
+    /// Add synthetic time (injected slow step / queue stall, or the
+    /// open-loop generator skipping ahead to the next arrival).
+    pub fn advance_ms(&mut self, ms: u64) {
+        self.synthetic_ms = self.synthetic_ms.saturating_add(ms);
+    }
+}
+
+/// KV slot accounting: every admitted-to-session request reserves
+/// `prompt_len + max_new` slot units, released on its terminal state.
+/// After a full drain `in_use() == 0` — the chaos drill's "no KV slots
+/// leak" check.
+#[derive(Debug, Default)]
+pub struct KvLedger {
+    reserved: BTreeMap<u64, usize>,
+    in_use: usize,
+    peak: usize,
+}
+
+impl KvLedger {
+    pub fn reserve(&mut self, id: u64, slots: usize) {
+        debug_assert!(!self.reserved.contains_key(&id), "double reserve for {id}");
+        self.reserved.insert(id, slots);
+        self.in_use += slots;
+        self.peak = self.peak.max(self.in_use);
+    }
+
+    /// Release `id`'s reservation; returns the freed slots (0 if it
+    /// held none — release is idempotent so every terminal path can
+    /// call it unconditionally).
+    pub fn release(&mut self, id: u64) -> usize {
+        let n = self.reserved.remove(&id).unwrap_or(0);
+        self.in_use -= n;
+        n
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.in_use
+    }
+
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+}
+
+/// Consecutive-failure circuit breaker for the packed path. A poisoned
+/// row on the packed model counts as a failure; a packed request
+/// completing cleanly resets the streak. Once tripped it stays tripped
+/// (the operator resets by restarting the gateway): flapping between a
+/// kernel that is actively emitting NaNs and back is worse than serving
+/// dense until someone looks at it.
+#[derive(Debug)]
+pub struct Breaker {
+    threshold: u32,
+    consecutive: u32,
+    tripped: bool,
+}
+
+impl Breaker {
+    pub fn new(threshold: u32) -> Breaker {
+        Breaker { threshold, consecutive: 0, tripped: false }
+    }
+
+    /// Record a packed-path row failure; returns true iff this failure
+    /// trips the breaker (exactly once).
+    pub fn record_failure(&mut self) -> bool {
+        self.consecutive += 1;
+        if !self.tripped && self.threshold > 0 && self.consecutive >= self.threshold {
+            self.tripped = true;
+            return true;
+        }
+        false
+    }
+
+    pub fn record_success(&mut self) {
+        self.consecutive = 0;
+    }
+
+    pub fn is_tripped(&self) -> bool {
+        self.tripped
+    }
+}
+
+/// Monotone gateway counters; the conservation test checks
+/// `admitted == completed + deadline_missed + failed` after a drain.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct GatewayCounters {
+    pub submitted: u64,
+    pub admitted: u64,
+    pub shed: u64,
+    pub completed: u64,
+    pub deadline_missed: u64,
+    pub failed: u64,
+    /// Completions served by the dense fallback.
+    pub degraded: u64,
+    /// Requests returned to the queue by a session abort.
+    pub requeued: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_reserve_release_balances() {
+        let mut l = KvLedger::default();
+        l.reserve(1, 10);
+        l.reserve(2, 5);
+        assert_eq!(l.in_use(), 15);
+        assert_eq!(l.peak(), 15);
+        assert_eq!(l.release(1), 10);
+        assert_eq!(l.release(1), 0, "release must be idempotent");
+        assert_eq!(l.release(2), 5);
+        assert_eq!(l.in_use(), 0);
+        assert_eq!(l.peak(), 15);
+    }
+
+    #[test]
+    fn breaker_trips_on_consecutive_failures_only() {
+        let mut b = Breaker::new(3);
+        assert!(!b.record_failure());
+        assert!(!b.record_failure());
+        b.record_success(); // streak broken
+        assert!(!b.record_failure());
+        assert!(!b.record_failure());
+        assert!(b.record_failure(), "third consecutive failure must trip");
+        assert!(b.is_tripped());
+        assert!(!b.record_failure(), "trip fires exactly once");
+        // threshold 0 never trips
+        let mut off = Breaker::new(0);
+        for _ in 0..10 {
+            assert!(!off.record_failure());
+        }
+        assert!(!off.is_tripped());
+    }
+
+    #[test]
+    fn clock_synthetic_time_accumulates() {
+        let mut c = GatewayClock::default();
+        let t = c.now_ms();
+        c.advance_ms(1000);
+        c.advance_ms(250);
+        assert!(c.now_ms() >= t + 1250);
+    }
+
+    #[test]
+    fn serve_error_displays_and_converts() {
+        let e = ServeError::PoisonedLogits { row: 2, step: 7 };
+        let a: anyhow::Error = e.clone().into();
+        assert!(format!("{a:#}").contains("row 2"));
+        assert_eq!(a.downcast_ref::<ServeError>(), Some(&e));
+        let s = ShedReason::KvBudget { need: 100, budget: 64 };
+        assert_eq!(s.tag(), "kv_budget");
+        assert!(format!("{s}").contains("100"));
+    }
+
+    #[test]
+    fn request_kv_slots() {
+        let r = Request::new(vec![1, 2, 3], 5).with_deadline(100);
+        assert_eq!(r.kv_slots(), 8);
+        assert_eq!(r.deadline_ms, Some(100));
+    }
+}

@@ -1,0 +1,239 @@
+//! Serving-gateway chaos drills: request conservation under injected
+//! faults. The invariant every drill checks — under poisoned-logits,
+//! slow-step, queue-stall, and kill faults, every admitted request
+//! terminates in EXACTLY ONE of {completed, deadline-missed,
+//! failed-typed}, the KV slot ledger returns to zero (nothing leaks),
+//! and every non-degraded completion is bit-identical to that prompt's
+//! solo run (faults against one request never perturb another).
+//!
+//! `chaos_drill_from_env` additionally honours `TESSERAQ_FAULTS`, so the
+//! CI `gateway-chaos` matrix reruns it under each fault spec; without
+//! the env var it runs a combined default spec. No compiled artifacts
+//! needed.
+
+use std::rc::Rc;
+
+use tesseraq::model::{ModelConfig, Params};
+use tesseraq::robust::FaultPlan;
+use tesseraq::serve::{
+    Gateway, GatewayConfig, Request, RequestOutcome, ServeError, ServeModel,
+};
+use tesseraq::tensor::Pcg32;
+
+fn nano_model(seed: u64) -> (ModelConfig, Params) {
+    let cfg = ModelConfig::preset("nano").unwrap();
+    let mut rng = Pcg32::seeded(seed);
+    let p = Params::init(&cfg, &mut rng);
+    (cfg, p)
+}
+
+/// The drill workload: a mix of prompt lengths and deadlines. Deadlines
+/// are huge relative to real decode time (minutes) but tiny relative to
+/// synthetic fault delays (hours), so outcomes depend on the fault spec,
+/// never on machine speed.
+fn workload() -> Vec<(Vec<i32>, usize, Option<u64>)> {
+    vec![
+        (vec![3, 17, 40, 9], 4, None),
+        (vec![12, 7], 3, Some(120_000)),
+        (vec![1, 2, 3, 4, 5], 5, None),
+        (vec![60, 61, 62], 4, Some(120_000)),
+        (vec![9, 9, 9, 9], 2, None),
+        (vec![33, 44], 6, Some(120_000)),
+    ]
+}
+
+/// Run the workload through a gateway armed with `plan` and check the
+/// conservation invariant. Returns the terminal counters for
+/// spec-specific assertions.
+fn run_drill(
+    m: &ServeModel,
+    solo_ref: &ServeModel,
+    plan: Rc<FaultPlan>,
+) -> tesseraq::serve::GatewayCounters {
+    let cfg = GatewayConfig {
+        queue_depth: 16,
+        max_batch: 2,
+        kv_slot_budget: 512,
+        breaker_threshold: 3,
+        ..Default::default()
+    };
+    let mut gw = Gateway::new(m, cfg).with_faults(plan);
+    let reqs = workload();
+    let ids: Vec<u64> = reqs
+        .iter()
+        .map(|(p, n, dl)| {
+            let mut r = Request::new(p.clone(), *n);
+            if let Some(ms) = dl {
+                r = r.with_deadline(*ms);
+            }
+            gw.submit(r).unwrap()
+        })
+        .collect();
+    gw.drain();
+    assert!(gw.idle(), "drain left work behind");
+
+    // conservation: every admitted request has exactly one terminal
+    // outcome, and the counter partition adds up
+    let c = gw.counters().clone();
+    assert_eq!(c.admitted, ids.len() as u64);
+    assert_eq!(
+        c.admitted,
+        c.completed + c.deadline_missed + c.failed,
+        "outcome partition does not cover admissions"
+    );
+    assert_eq!(gw.outcomes().len() as u64, c.admitted, "outcome per admitted request");
+    // no KV slots leak: accounting returns to zero after the drain
+    assert_eq!(gw.kv_in_use(), 0, "leaked KV slot reservations");
+    assert!(gw.kv_peak() > 0, "drill never reserved anything");
+
+    for (id, (prompt, new, _)) in ids.iter().zip(&reqs) {
+        match &gw.outcomes()[id] {
+            // unaffected rows: bit-identical to the solo run on the same
+            // (primary) path
+            RequestOutcome::Completed { tokens, degraded: false, .. } => {
+                let (solo, _) = m.generate(std::slice::from_ref(prompt), *new).unwrap();
+                assert_eq!(tokens, &solo[0], "request {id} diverged from solo");
+            }
+            // degraded rows: bit-identical to the dense fallback's solo run
+            RequestOutcome::Completed { tokens, degraded: true, .. } => {
+                let (solo, _) =
+                    solo_ref.generate(std::slice::from_ref(prompt), *new).unwrap();
+                assert_eq!(tokens, &solo[0], "degraded request {id} diverged from dense solo");
+            }
+            RequestOutcome::DeadlineMissed { .. } => {}
+            // failed is always *typed* — the enum makes anything else
+            // unrepresentable; pin the variants we expect from faults
+            RequestOutcome::Failed(e) => assert!(
+                matches!(
+                    e,
+                    ServeError::PoisonedLogits { .. }
+                        | ServeError::SessionAborted
+                        | ServeError::FallbackFailed(_)
+                        | ServeError::KvCapacity { .. }
+                ),
+                "unexpected failure type: {e:?}"
+            ),
+        }
+    }
+    c
+}
+
+#[test]
+fn chaos_drill_poison_slow_kill_combined() {
+    // all three request-level fault kinds in one run: request 2 poisons
+    // at its step 2, global decode step 4 takes 10^7 ms (evicting every
+    // deadlined in-flight request), and the session is killed at global
+    // step 6 (requeueing its rows once)
+    let (_, p) = nano_model(30);
+    let m = ServeModel::dense(&p);
+    let plan = Rc::new(FaultPlan::parse("poison@2.2,slow@4.10000000,kill@6").unwrap());
+    let c = run_drill(&m, &m, plan);
+    assert!(c.failed >= 1, "poison without fallback must fail a request");
+    assert!(c.deadline_missed >= 1, "synthetic slow step must evict a deadlined request");
+    assert!(c.completed >= 1, "unaffected requests must still complete");
+}
+
+#[test]
+fn chaos_drill_queue_stall() {
+    // a stall before the first dispatch ages the whole queue past every
+    // finite deadline: deadlined requests miss in-queue, undeadlined ones
+    // complete untouched
+    let (_, p) = nano_model(31);
+    let m = ServeModel::dense(&p);
+    let plan = Rc::new(FaultPlan::parse("stall@1.10000000").unwrap());
+    let c = run_drill(&m, &m, plan);
+    assert_eq!(c.deadline_missed, 3, "every deadlined request must expire in queue");
+    assert_eq!(c.completed, 3, "every undeadlined request must complete");
+    assert_eq!(c.failed, 0);
+}
+
+#[test]
+fn chaos_drill_from_env() {
+    // CI matrix entry point: rerun the conservation drill under whatever
+    // TESSERAQ_FAULTS says; default to a kill+poison combination so the
+    // test also bites locally
+    let (_, p) = nano_model(32);
+    let m = ServeModel::dense(&p);
+    let plan = FaultPlan::from_env()
+        .unwrap_or_else(|| Rc::new(FaultPlan::parse("kill@3,poison@4.1").unwrap()));
+    run_drill(&m, &m, plan);
+}
+
+#[test]
+fn degraded_fallback_completions_match_dense_solo() {
+    // packed primary + dense fallback under repeated poison faults: the
+    // breaker trips, poisoned requests complete degraded on the dense
+    // path, and their outputs equal the dense model's solo runs exactly
+    let (_, p) = nano_model(33);
+    let packed = ServeModel::packed_rtn(&p, 2).unwrap();
+    let dense = ServeModel::dense(&p);
+    let cfg = GatewayConfig {
+        queue_depth: 16,
+        max_batch: 2,
+        kv_slot_budget: 512,
+        breaker_threshold: 2,
+        ..Default::default()
+    };
+    let plan = Rc::new(FaultPlan::parse("poison@0.1,poison@1.1").unwrap());
+    let mut gw = Gateway::new(&packed, cfg).with_fallback(&dense).with_faults(plan);
+    let reqs = workload();
+    let ids: Vec<u64> = reqs
+        .iter()
+        .map(|(p, n, _)| gw.submit(Request::new(p.clone(), *n)).unwrap())
+        .collect();
+    gw.drain();
+    let c = gw.counters().clone();
+    assert_eq!(c.admitted, c.completed + c.deadline_missed + c.failed);
+    assert_eq!(gw.kv_in_use(), 0);
+    assert!(gw.is_degraded(), "two consecutive packed poisons must trip the breaker");
+    assert!(c.degraded >= 2, "poisoned requests must complete via the fallback");
+    for (id, (prompt, new, _)) in ids.iter().zip(&reqs) {
+        match &gw.outcomes()[id] {
+            RequestOutcome::Completed { tokens, degraded, .. } => {
+                let solo_model = if *degraded { &dense } else { &packed };
+                let (solo, _) =
+                    solo_model.generate(std::slice::from_ref(prompt), *new).unwrap();
+                assert_eq!(tokens, &solo[0], "request {id} (degraded={degraded}) diverged");
+            }
+            other => panic!("request {id}: expected completion, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn overload_sheds_instead_of_collapsing() {
+    // open-loop burst far past queue capacity: the gateway sheds with
+    // typed reasons, serves exactly what it admitted, and conserves
+    // every admitted request
+    let (cfg_m, p) = nano_model(34);
+    let m = ServeModel::dense(&p);
+    let cfg = GatewayConfig {
+        queue_depth: 4,
+        max_batch: 2,
+        kv_slot_budget: 128,
+        ..Default::default()
+    };
+    let mut gw = Gateway::new(&m, cfg);
+    let mut rng = Pcg32::seeded(99);
+    let mut admitted = 0u64;
+    let mut shed = 0u64;
+    for _ in 0..32 {
+        let len = 1 + rng.below(6);
+        let prompt: Vec<i32> =
+            (0..len).map(|_| rng.below(cfg_m.vocab_size) as i32).collect();
+        match gw.submit(Request::new(prompt, 4)) {
+            Ok(_) => admitted += 1,
+            Err(reason) => {
+                shed += 1;
+                assert!(!reason.tag().is_empty());
+            }
+        }
+    }
+    assert!(shed > 0, "a 32-request burst into a depth-4 queue must shed");
+    gw.drain();
+    let c = gw.counters();
+    assert_eq!(c.admitted, admitted);
+    assert_eq!(c.shed, shed);
+    assert_eq!(c.admitted, c.completed + c.deadline_missed + c.failed);
+    assert_eq!(gw.kv_in_use(), 0);
+}

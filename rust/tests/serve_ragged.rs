@@ -91,6 +91,80 @@ fn decode_stats_report_prefill_and_per_row_lengths() {
 }
 
 #[test]
+fn gateway_eviction_preserves_survivors() {
+    // evicting ANY subset of rows mid-decode (deadline eviction forced
+    // by a synthetic slow step) leaves every surviving request
+    // bit-identical to its solo run — the serving-gateway extension of
+    // the ragged-batch independence contract
+    use std::rc::Rc;
+    use tesseraq::robust::FaultPlan;
+    use tesseraq::serve::{Gateway, GatewayConfig, Request, RequestOutcome};
+
+    let (cfg, p) = nano_model(16);
+    let m = ServeModel::dense(&p);
+    tesseraq::util::proptest(6, 0xE71C7, |rng| {
+        let n = 2 + rng.below(4);
+        let max_batch = 1 + rng.below(3);
+        let mut prompts: Vec<Vec<i32>> = Vec::new();
+        let mut victims: Vec<usize> = Vec::new();
+        for i in 0..n {
+            let len = 1 + rng.below(6);
+            prompts.push((0..len).map(|_| rng.below(cfg.vocab_size) as i32).collect());
+            if rng.below(2) == 1 {
+                victims.push(i);
+            }
+        }
+        let new = 1 + rng.below(4);
+        let gcfg = GatewayConfig {
+            queue_depth: 16,
+            max_batch,
+            kv_slot_budget: 512,
+            ..Default::default()
+        };
+        // decode step 1 "takes" 10^7 ms: every deadlined request (victim)
+        // is evicted mid-batch or expires in queue; the rest are untouched
+        let plan = Rc::new(FaultPlan::parse("slow@1.10000000").unwrap());
+        let mut gw = Gateway::new(&m, gcfg).with_faults(plan);
+        let ids: Vec<u64> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, pr)| {
+                let mut req = Request::new(pr.clone(), new);
+                if victims.contains(&i) {
+                    req = req.with_deadline(5_000);
+                }
+                gw.submit(req).unwrap()
+            })
+            .collect();
+        gw.drain();
+        assert_eq!(gw.kv_in_use(), 0, "leaked KV accounting");
+        let c = gw.counters();
+        assert_eq!(c.admitted, c.completed + c.deadline_missed + c.failed);
+        for (i, id) in ids.iter().enumerate() {
+            let out = &gw.outcomes()[id];
+            if victims.contains(&i) {
+                assert!(
+                    matches!(out, RequestOutcome::DeadlineMissed { .. }),
+                    "victim {i}: expected deadline miss, got {out:?}"
+                );
+            } else {
+                match out {
+                    RequestOutcome::Completed { tokens, .. } => {
+                        let (solo, _) =
+                            m.generate(std::slice::from_ref(&prompts[i]), new).unwrap();
+                        assert_eq!(
+                            tokens, &solo[0],
+                            "survivor {i} perturbed by eviction of {victims:?}"
+                        );
+                    }
+                    other => panic!("survivor {i}: expected completion, got {other:?}"),
+                }
+            }
+        }
+    });
+}
+
+#[test]
 fn ragged_equivalence_proptest() {
     // random ragged batches: every row must equal its solo run exactly
     let (cfg, p) = nano_model(15);
